@@ -1,0 +1,246 @@
+"""Benchmark harness — one function per MemIntelli table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``derived`` is the
+figure's headline quantity (relative error, accuracy, iterations, ...).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def bench_device_model(quick=False):
+    """Fig. 3: log-normal conductance statistics match the target cv."""
+    from repro.core.device import lognormal_program
+
+    g = jnp.full((200_000,), 1e-5)
+    cv = 0.05
+
+    def run():
+        return lognormal_program(jax.random.PRNGKey(0), g, cv)
+
+    out, us = _timed(run)
+    got_cv = float(jnp.std(out) / jnp.mean(out))
+    mean_err = abs(float(jnp.mean(out)) - 1e-5) / 1e-5
+    _row("fig3_device_model", us, f"cv={got_cv:.4f}(target {cv}) mean_err={mean_err:.4f}")
+
+
+def bench_crossbar_solver(quick=False):
+    """Fig. 10: cross-iteration solver — err < 1e-3 in 20 iters."""
+    from repro.core.crossbar import solve_crossbar
+
+    rng = np.random.default_rng(0)
+    for size in (64, 256) if quick else (64, 256, 1024):
+        g = jnp.asarray(rng.uniform(1e-7, 1e-5, (size, size)), jnp.float32)
+        v = jnp.asarray(
+            0.2 * (1 + np.sin(np.arange(size) / size * 6.28)), jnp.float32
+        )
+        ref = solve_crossbar(g, v, 2.93, 200)
+
+        def run():
+            return solve_crossbar(g, v, 2.93, 20)
+
+        out, us = _timed(run)
+        err = float(
+            jnp.linalg.norm(out.i_out - ref.i_out)
+            / jnp.linalg.norm(ref.i_out)
+        )
+        _row(f"fig10_crossbar_{size}", us, f"err20={err:.2e} (<1e-3: {err<1e-3})")
+
+
+def bench_matmul_re(quick=False):
+    """Fig. 11: variable-precision matmul RE (INT8/FP32/BF16/Flex16+5)."""
+    from repro.apps.matmul_re import run
+
+    out, us = _timed(run, 128 if not quick else 64, repeats=1)
+    for fmt, re in out.items():
+        _row(f"fig11_matmul_{fmt}", us / len(out), f"RE={re:.4e}")
+
+
+def bench_monte_carlo(quick=False):
+    """Fig. 12: quantisation vs pre-alignment across var x block."""
+    from repro.apps.monte_carlo import run
+
+    out, us = _timed(
+        run, 64, 3 if quick else 10,
+        (0.0, 0.05), (32, 64), repeats=1,
+    )
+    for (kind, var, bs), (mu, sd) in out.items():
+        _row(
+            f"fig12_mc_{kind}_v{var}_b{bs}", us / len(out),
+            f"RE={mu:.4e}+-{sd:.1e}",
+        )
+    # headline: quantisation beats pre-alignment
+    q = out[("quant", 0.05, 64)][0]
+    p = out[("prealign", 0.05, 64)][0]
+    _row("fig12_quant_lt_prealign", 0.0, f"{q:.4f}<{p:.4f}={q < p}")
+
+
+def bench_linsolve(quick=False):
+    """Fig. 13: circuit-equation solving, software CG vs analog
+    mixed-precision refinement."""
+    from repro.apps.linsolve import run
+
+    out, us = _timed(run, repeats=1)
+    _row(
+        "fig13_linsolve", us,
+        f"sw_err={out['sw_err']:.2e} hw_err={out['hw_err']:.2e} "
+        f"overlap={out['solution_overlap']:.2e} "
+        f"hw_matvecs={out['hw_matvecs']}vs{out['sw_iters']}",
+    )
+
+
+def bench_cwt(quick=False):
+    """Fig. 14: Morlet CWT on INT4-mapped kernels."""
+    from repro.apps.cwt import run
+
+    out, us = _timed(run, 256 if quick else 512, repeats=1)
+    _row(
+        "fig14_cwt", us,
+        f"power_RE={out['power_re']:.4f} "
+        f"peak_match={out['peak_scale_match']}",
+    )
+
+
+def bench_kmeans(quick=False):
+    """Fig. 15: K-means with crossbar Euclidean distances."""
+    from repro.apps.kmeans import run
+
+    out, us = _timed(run, repeats=1)
+    _row(
+        "fig15_kmeans", us,
+        f"hw_vs_sw={out['hw_vs_sw_agreement']:.3f} "
+        f"hw_acc={out['hw_vs_truth']:.3f} sw_acc={out['sw_vs_truth']:.3f}",
+    )
+
+
+def bench_train(quick=False):
+    """Fig. 16: hardware-aware training at INT4/INT8/FP16."""
+    from repro.apps.train_mlp import run
+
+    steps = 40 if quick else 120
+    out, us = _timed(run, ("fp_full", "int4", "int8", "fp16"), steps, repeats=1)
+    for fmt, r in out.items():
+        _row(
+            f"fig16_train_{fmt}", us / len(out),
+            f"loss={r['first_loss']:.3f}->{r['final_loss']:.3f} "
+            f"acc={r['test_acc']:.3f}",
+        )
+
+
+def bench_inference(quick=False):
+    """Fig. 17: inference vs slice bits and conductance variation."""
+    from repro.apps.inference_sweep import run
+
+    bits = (3, 5, 8) if quick else (2, 3, 4, 5, 6, 8)
+    variations = (0.0, 0.05, 0.2) if quick else (0.0, 0.02, 0.05, 0.1, 0.2)
+    out, us = _timed(run, bits, variations, repeats=1)
+    _row("fig17_fp_acc", us, f"acc={out['fp_acc']:.3f}")
+    for b, a in out["acc_by_bits"].items():
+        _row(f"fig17_bits_{b}", 0.0, f"acc={a:.3f}")
+    for v, a in out["acc_by_var"].items():
+        _row(f"fig17_var_{v}", 0.0, f"acc={a:.3f}")
+
+
+def bench_runtime(quick=False):
+    """Table 3: simulation throughput (img/s) across engine modes."""
+    from repro.apps.train_mlp import forward, init_net, synth_digits
+    from repro.core import DPEConfig, spec
+
+    x, _ = synth_digits(16, seed=2)  # 128 images
+    params = init_net(jax.random.PRNGKey(0))
+    sp = spec("fp16")
+    modes = {
+        "digital": None,
+        "mem_fast": DPEConfig(input_spec=sp, weight_spec=sp, mode="fast"),
+        "mem_faithful": DPEConfig(input_spec=sp, weight_spec=sp),
+    }
+    for name, cfg in modes.items():
+        f = jax.jit(
+            lambda p, xb: forward(p, xb, cfg, jax.random.PRNGKey(0))
+        )
+        _, us = _timed(f, params, x, repeats=2)
+        imgs = x.shape[0] / (us / 1e6)
+        _row(f"table3_runtime_{name}", us, f"img_per_s={imgs:.1f}")
+
+
+def bench_kernel(quick=False):
+    """Pallas kernel (interpret) vs XLA faithful path parity check."""
+    from repro.core import DPEConfig, spec
+    from repro.core.dpe import prepare_input, prepare_weight
+    from repro.kernels.ops import sliced_matmul
+    from repro.kernels.ref import sliced_matmul_ref
+
+    sp = spec("int8")
+    cfg = DPEConfig(input_spec=sp, weight_spec=sp, array_size=(64, 64),
+                    noise_mode="off")
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+    pw = prepare_weight(w, cfg, None)
+    xs, sx = prepare_input(x, cfg)
+    kw = dict(input_spec=sp, weight_spec=sp, array_size=(64, 64),
+              radc=1024, adc_mode="dynamic")
+
+    def run():
+        return sliced_matmul(xs, sx, pw.slices, pw.scale, bm=64, **kw)
+
+    out, us = _timed(run, repeats=1)
+    ref = sliced_matmul_ref(xs, sx, pw.slices, pw.scale, bm=64, **kw)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    _row("kernel_sliced_matmul_interpret", us, f"vs_ref_rel={rel:.2e}")
+
+
+ALL = [
+    bench_device_model,
+    bench_crossbar_solver,
+    bench_matmul_re,
+    bench_monte_carlo,
+    bench_linsolve,
+    bench_cwt,
+    bench_kmeans,
+    bench_train,
+    bench_inference,
+    bench_runtime,
+    bench_kernel,
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # keep the harness going
+            _row(fn.__name__, -1, f"ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serve a small LM with batched requests through simulated memristive
+hardware: prefill once, decode greedily, compare digital vs analog
+outputs token-by-token.
+
+    PYTHONPATH=src python examples/serve_memristive_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, spec
+from repro.core.layers import MemPolicy
+from repro.models import init_params
+from repro.serve import greedy_generate
+
+
+def main():
+    cfg = get_smoke("rwkv6-1.6b")  # attention-free: O(1) decode state
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, cfg.vocab)
+
+    digital = greedy_generate(
+        params, cfg, prompts, 12, compute_dtype=jnp.float32
+    )
+    analog_policy = MemPolicy(
+        default=DPEConfig(
+            input_spec=spec("fp16"), weight_spec=spec("fp16"),
+            mode="fast", var=0.02,
+        ),
+        overrides=(("lm_head", None),),
+    )
+    analog = greedy_generate(
+        params, cfg, prompts, 12, policy=analog_policy,
+        compute_dtype=jnp.float32,
+    )
+    agree = float((digital == analog).mean())
+    print("digital tokens:", digital[0].tolist())
+    print("analog  tokens:", analog[0].tolist())
+    print(f"token agreement across batch: {agree:.2%} "
+          "(analog noise perturbs near-tie logits)")
+
+
+if __name__ == "__main__":
+    main()

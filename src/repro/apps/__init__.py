@@ -1,0 +1,6 @@
+"""Paper application reproductions (MemIntelli §5):
+
+equation solving (Fig. 13), CWT (Fig. 14), K-means (Fig. 15), NN
+training (Fig. 16), inference sweeps (Fig. 17), matmul RE (Fig. 11),
+Monte-Carlo non-ideality analysis (Fig. 12).
+"""

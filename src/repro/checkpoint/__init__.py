@@ -1,0 +1,13 @@
+from .store import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    wait_for_saves,
+)
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "wait_for_saves",
+]

@@ -1,0 +1,52 @@
+"""Assigned architecture registry: ``get(name)`` / ``get_smoke(name)``.
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "h2o_danube_1p8b",
+    "qwen2_0p5b",
+    "qwen3_4b",
+    "qwen1p5_32b",
+    "rwkv6_1p6b",
+    "qwen3_moe_235b_a22b",
+    "kimi_k2_1t_a32b",
+    "whisper_tiny",
+    "jamba_v0p1_52b",
+    "phi3_vision_4p2b",
+)
+
+# public ids as assigned (dashes/dots) -> module name
+ALIASES = {
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-32b": "qwen1p5_32b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "whisper-tiny": "whisper_tiny",
+    "jamba-v0.1-52b": "jamba_v0p1_52b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def all_arch_names() -> list[str]:
+    return list(ALIASES)

@@ -1,0 +1,32 @@
+"""qwen1.5-32b — MHA (kv=40) with QKV bias.  [hf:Qwen/Qwen1.5 family; hf]
+64L d_model=5120 40H d_ff=27392 vocab=152064.
+Full attention => long_500k skipped.  40 heads don't divide the 16-way
+model axis: TP shards attention via zero-padded heads 40->48 (exactness
+preserved; see DESIGN.md §6).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm="rms",
+    act="silu",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen1.5-smoke",
+    n_layers=2,
+    d_model=160,
+    n_heads=5,  # non-divisible head count family trait
+    n_kv_heads=5,
+    d_ff=320,
+    vocab=512,
+)

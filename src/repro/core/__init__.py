@@ -1,0 +1,48 @@
+"""MemIntelli core: bit-sliced variable-precision dot-product engine."""
+from .engine import DPEConfig, PAPER_DEFAULTS
+from .slicing import SliceSpec, slice_int, unslice, slice_significances
+from .presets import (
+    INT4,
+    INT8,
+    INT12,
+    INT16,
+    FP16,
+    BF16,
+    FLEX16_5,
+    FP32,
+    PRESETS,
+    spec,
+)
+from .dpe import (
+    PreparedWeight,
+    prepare_weight,
+    prepare_input,
+    dpe_matmul,
+    dpe_matmul_prepared,
+    relative_error,
+)
+
+__all__ = [
+    "DPEConfig",
+    "PAPER_DEFAULTS",
+    "SliceSpec",
+    "slice_int",
+    "unslice",
+    "slice_significances",
+    "INT4",
+    "INT8",
+    "INT12",
+    "INT16",
+    "FP16",
+    "BF16",
+    "FLEX16_5",
+    "FP32",
+    "PRESETS",
+    "spec",
+    "PreparedWeight",
+    "prepare_weight",
+    "prepare_input",
+    "dpe_matmul",
+    "dpe_matmul_prepared",
+    "relative_error",
+]

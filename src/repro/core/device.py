@@ -1,0 +1,78 @@
+"""Memristor device model — MemIntelli §3.2, Eq. (1), Fig. 3.
+
+Conductance statistics follow a log-normal distribution.  The paper
+parameterises variability with the coefficient of variation
+``cv = std(G) / mean(G)`` and gives (Eq. 1)
+
+    sigma = sqrt(ln(cv^2 + 1))
+    mu    = ln(E[G]) - sigma^2 / 2          (mean-preserving)
+
+(the paper's text prints ``sigma/2``; the mean-preserving log-normal
+parameterisation — consistent with their Fig. 3 fit — is ``sigma^2/2``,
+which we use; see DESIGN.md §3).
+
+A b-bit slice value ``v ∈ [0, 2^b-1]`` maps linearly onto the conductance
+window ``[LGS, HGS]``; device-to-device and cycle-to-cycle variations are
+modelled together as one multiplicative log-normal sample applied at
+*programming* time (weights are re-programmed on every training update).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "slice_to_conductance",
+    "conductance_to_slice",
+    "lognormal_program",
+    "noisy_slice_values",
+]
+
+
+def slice_to_conductance(
+    v: jax.Array, bits: int, hgs: float, lgs: float
+) -> jax.Array:
+    """Linear map of an unsigned b-bit slice value onto [LGS, HGS]."""
+    dg = (hgs - lgs) / (2.0**bits - 1.0)
+    return lgs + v.astype(jnp.float32) * dg
+
+
+def conductance_to_slice(
+    g: jax.Array, bits: int, hgs: float, lgs: float
+) -> jax.Array:
+    """Inverse of :func:`slice_to_conductance`; float-valued (carries the
+    analog error into the digital domain)."""
+    dg = (hgs - lgs) / (2.0**bits - 1.0)
+    return (g - lgs) / dg
+
+
+def lognormal_program(key: jax.Array, g: jax.Array, cv: float) -> jax.Array:
+    """Sample programmed conductances around target ``g`` with coefficient
+    of variation ``cv`` (Eq. 1, mean-preserving)."""
+    if cv <= 0.0:
+        return g
+    sigma = jnp.sqrt(jnp.log(cv * cv + 1.0))
+    mu = jnp.log(jnp.maximum(g, 1e-30)) - 0.5 * sigma * sigma
+    z = jax.random.normal(key, g.shape, dtype=jnp.float32)
+    return jnp.exp(mu + sigma * z)
+
+
+def noisy_slice_values(
+    key: jax.Array,
+    v: jax.Array,
+    bits: int,
+    hgs: float,
+    lgs: float,
+    cv: float,
+) -> jax.Array:
+    """Programming-noise round trip: slice ints -> conductances ->
+    log-normal programming -> float slice values.
+
+    This is the value that actually multiplies the input on the crossbar;
+    the deviation from the integer is the analog weight error.
+    """
+    if cv <= 0.0:
+        return v.astype(jnp.float32)
+    g = slice_to_conductance(v, bits, hgs, lgs)
+    g_prog = lognormal_program(key, g, cv)
+    return conductance_to_slice(g_prog, bits, hgs, lgs)

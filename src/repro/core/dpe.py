@@ -1,0 +1,397 @@
+"""Variable-precision bit-sliced dot-product engine — MemIntelli §3.3.
+
+The pipeline for ``y ≈ x @ w`` (Fig. 5 / Fig. 6 / Fig. 7):
+
+1. **Block mapping** — ``w (K,N)`` is tiled into ``array_size = (bk,bn)``
+   crossbar tiles (zero-padded); ``x (M,K)`` is tiled along K.  Quantisation
+   / pre-alignment coefficients are *per block* to bound dynamic-range error.
+2. **Quantise + slice** — per block, operands become unsigned bit-slices
+   (:mod:`repro.core.slicing`); weight slices go through the log-normal
+   programming model (:mod:`repro.core.device`), inputs through the DAC.
+3. **Analog matmul** — every (input-slice × weight-slice) pair is one
+   crossbar operation per K-block; the bit-line current is ADC-quantised.
+4. **Digital recombination** — partial sums are weighted by the slice
+   significances and the per-block scales, then accumulated over K-blocks.
+
+Three modes (DESIGN.md §4): ``faithful`` (paper semantics), ``fast``
+(beyond-paper digital slice folding — exact when the ADC is ideal), and
+``digital`` (software baseline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .device import noisy_slice_values
+from .engine import DPEConfig
+from .quant import adc_quantize, block_scale, dac_quantize, quantize
+from .slicing import SliceSpec, slice_int, slice_significances
+
+__all__ = [
+    "PreparedWeight",
+    "prepare_weight",
+    "prepare_input",
+    "dpe_matmul",
+    "dpe_matmul_prepared",
+    "relative_error",
+]
+
+
+class PreparedWeight(NamedTuple):
+    """A weight matrix programmed onto (simulated) crossbar tiles.
+
+    slices: (Sw, Kp, Np) float32 — noisy slice values (analog domain).
+    scale:  (nk, nn)     float32 — per-block quant / pre-alignment scale.
+    """
+
+    slices: jax.Array
+    scale: jax.Array
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads)
+
+
+def prepare_weight(
+    w: jax.Array, cfg: DPEConfig, key: jax.Array | None = None
+) -> PreparedWeight:
+    """Quantise, slice and 'program' a weight matrix (paper's
+    ``update_weight()``).  ``key`` drives programming noise; pass None for
+    ideal devices."""
+    if w.ndim != 2:
+        raise ValueError(f"weights must be 2-D, got {w.shape}")
+    bk, bn = cfg.array_size
+    spec = cfg.weight_spec
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    kp, np_ = wp.shape
+    nk, nn = kp // bk, np_ // bn
+    wb = wp.reshape(nk, bk, nn, bn)
+    absmax = jnp.max(jnp.abs(wb), axis=(1, 3))  # (nk, nn)
+    scale = block_scale(absmax, spec)
+    wq = quantize(wb, scale[:, None, :, None], spec)  # int32 (nk,bk,nn,bn)
+    ws = slice_int(wq, spec).astype(jnp.float32)  # (Sw,nk,bk,nn,bn)
+    if cfg.cv > 0.0 and key is not None:
+        outs = []
+        for s, width in enumerate(spec.bits):
+            outs.append(
+                noisy_slice_values(
+                    jax.random.fold_in(key, s),
+                    ws[s],
+                    width,
+                    cfg.hgs,
+                    cfg.lgs,
+                    cfg.cv,
+                )
+            )
+        ws = jnp.stack(outs, axis=0)
+    # (Sw, nk, bk, nn, bn) -> (Sw, Kp, Np): adjacent axes merge directly.
+    ws_flat = ws.reshape(spec.n_slices, kp, np_)
+    return PreparedWeight(slices=ws_flat, scale=scale)
+
+
+def prepare_input(
+    x: jax.Array, cfg: DPEConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Quantise + slice + DAC the input.
+
+    Args:
+      x: (M, K) float.
+    Returns:
+      xs: (Sx, M, Kp) float32 DAC'd slice values; sx: (M, nk) scales.
+    """
+    bk, _ = cfg.array_size
+    spec = cfg.input_spec
+    xp = _pad_to(x.astype(jnp.float32), 1, bk)
+    m, kp = xp.shape
+    nk = kp // bk
+    xb = xp.reshape(m, nk, bk)
+    absmax = jnp.max(jnp.abs(xb), axis=2)  # (M, nk)
+    sx = block_scale(absmax, spec)
+    xq = quantize(xb, sx[:, :, None], spec)
+    xs = slice_int(xq, spec).astype(jnp.float32)  # (Sx, M, nk, bk)
+    outs = []
+    for s, width in enumerate(spec.bits):
+        vmax = float(2**width - 1)
+        outs.append(dac_quantize(xs[s], cfg.rdac, vmax))
+    xs = jnp.stack(outs, axis=0)
+    return xs.reshape(spec.n_slices, m, kp), sx
+
+
+def _adc_fullscale(cfg: DPEConfig, bx: int, bw: int) -> float:
+    bk, _ = cfg.array_size
+    return float(bk) * (2.0**bx - 1.0) * (2.0**bw - 1.0)
+
+
+def _faithful_matmul(
+    xs: jax.Array,
+    sx: jax.Array,
+    ws: jax.Array,
+    sw: jax.Array,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Per slice-pair, per K-block analog matmul with ADC (paper path).
+
+    xs: (Sx, M, Kp); sx: (M, nk); ws: (Sw, Kp, Np); sw: (nk, nn).
+    Returns (M, Np) float32.
+    """
+    bk, bn = cfg.array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    sigx = slice_significances(cfg.input_spec)
+    sigw = slice_significances(cfg.weight_spec)
+    xsb = xs.reshape(sxn, m, nk, bk)
+    wsb = ws.reshape(swn, nk, bk, np_)
+
+    def kb_body(kb, acc):
+        xk = lax.dynamic_index_in_dim(xsb, kb, axis=2, keepdims=False)
+        wk = lax.dynamic_index_in_dim(wsb, kb, axis=1, keepdims=False)
+        out = jnp.zeros((m, nn, bn), jnp.float32)
+        for i in range(sxn):
+            for j in range(swn):
+                p = (xk[i] @ wk[j]).reshape(m, nn, bn)
+                if cfg.radc > 1:
+                    if cfg.adc_mode == "dynamic":
+                        ymax = jnp.max(p, axis=(0, 2), keepdims=True)
+                    else:
+                        ymax = jnp.float32(
+                            _adc_fullscale(
+                                cfg,
+                                cfg.input_spec.bits[i],
+                                cfg.weight_spec.bits[j],
+                            )
+                        )
+                    p = adc_quantize(p, cfg.radc, ymax)
+                out = out + float(sigx[i] * sigw[j]) * p
+        sxk = lax.dynamic_index_in_dim(sx, kb, axis=1, keepdims=False)
+        swk = lax.dynamic_index_in_dim(sw, kb, axis=0, keepdims=False)
+        out = out * sxk[:, None, None] * swk[None, :, None]
+        return acc + out.reshape(m, np_)
+
+    return lax.fori_loop(
+        0, nk, kb_body, jnp.zeros((m, np_), jnp.float32), unroll=False
+    )
+
+
+def _fast_matmul(
+    xs: jax.Array,
+    sx: jax.Array,
+    ws: jax.Array,
+    sw: jax.Array,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Beyond-paper: digitally fold slices *before* the GEMM.
+
+    One GEMM instead of Sx*Sw; identical result when the ADC is ideal
+    because recombination is linear and noise lives on individual slice
+    values (already folded in).  See DESIGN.md §4 and §Perf.
+    """
+    bk, bn = cfg.array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    sigx = jnp.asarray(slice_significances(cfg.input_spec), jnp.float32)
+    sigw = jnp.asarray(slice_significances(cfg.weight_spec), jnp.float32)
+    # Fold slices: x_eff (M,Kp) carries sx per block; w_eff (Kp,Np) per blk.
+    x_eff = jnp.einsum("s,smk->mk", sigx, xs)
+    w_eff = jnp.einsum("s,skn->kn", sigw, ws)
+    x_deq = (x_eff.reshape(m, nk, bk) * sx[:, :, None]).reshape(m, kp)
+    w_deq = (
+        w_eff.reshape(nk, bk, nn, bn) * sw[:, None, :, None]
+    ).reshape(kp, np_)
+    return x_deq @ w_deq
+
+
+def fold_weight_noisy(
+    w: jax.Array, cfg: DPEConfig, key: jax.Array | None = None
+) -> jax.Array:
+    """Single-pass fast-mode weight pipeline: quantise per block, apply
+    per-slice programming noise, digitally recombine — WITHOUT ever
+    materialising the (S_w, K, N) slice stack (O(K*N) memory instead of
+    O(S_w*K*N); critical for trillion-parameter MoE steps).
+
+    Returns the dequantised noisy effective weight (Kp, Np) in
+    ``cfg.store_dtype``; identical math to prepare_weight + slice fold.
+    """
+    bk, bn = cfg.array_size
+    spec = cfg.weight_spec
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    kp, np_ = wp.shape
+    nk, nn = kp // bk, np_ // bn
+    wb = wp.reshape(nk, bk, nn, bn)
+    absmax = jnp.max(jnp.abs(wb), axis=(1, 3))
+    scale = block_scale(absmax, spec)
+    wq = quantize(wb, scale[:, None, :, None], spec)
+    sig = slice_significances(spec)
+    u = jnp.bitwise_and(wq, (1 << spec.total_bits) - 1)
+    acc = jnp.zeros(wb.shape, jnp.float32)
+    offs = spec.lsb_offsets
+    for s, width in enumerate(spec.bits):
+        v = jnp.bitwise_and(
+            jnp.right_shift(u, offs[s]), (1 << width) - 1
+        ).astype(jnp.float32)
+        if cfg.cv > 0.0 and key is not None:
+            v = noisy_slice_values(
+                jax.random.fold_in(key, s), v, width, cfg.hgs, cfg.lgs,
+                cfg.cv,
+            )
+        acc = acc + float(sig[s]) * v
+    w_deq = acc * scale[:, None, :, None]
+    out_dtype = jnp.bfloat16 if cfg.store_dtype == "bf16" else jnp.float32
+    return w_deq.reshape(kp, np_).astype(out_dtype)
+
+
+def fake_quant_input(x: jax.Array, cfg: DPEConfig) -> jax.Array:
+    """Fast-mode input pipeline: per-block quantise + dequantise (the DAC
+    is exact for the paper's defaults, and slicing+recombining an ideal
+    input is the identity).  x: (M, K) -> (M, Kp) in store_dtype."""
+    bk, _ = cfg.array_size
+    spec = cfg.input_spec
+    out_dtype = jnp.bfloat16 if cfg.store_dtype == "bf16" else jnp.float32
+    xp = _pad_to(x.astype(jnp.float32), 1, bk)
+    m, kp = xp.shape
+    xb = xp.reshape(m, kp // bk, bk)
+    absmax = jnp.max(jnp.abs(xb), axis=2)
+    sxs = block_scale(absmax, spec)
+    xq = quantize(xb, sxs[:, :, None], spec)
+    return (
+        (xq.astype(jnp.float32) * sxs[:, :, None])
+        .astype(out_dtype)
+        .reshape(m, kp)
+    )
+
+
+def _circuit_matmul(
+    xs: jax.Array,
+    sx: jax.Array,
+    ws: jax.Array,
+    sw: jax.Array,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Highest-fidelity path: every slice-pair crossbar operation solved
+    through the IR-drop circuit model (wire resistance + cross-iteration
+    nodal solve) instead of the ideal dot product.  O(iters) costlier —
+    for paper-repro experiments and small operators, not the LM hot path.
+
+    Maps slice values to physical conductances/voltages, solves the
+    resistive network per K-block, senses bit-line currents, converts
+    back to slice units and recombines digitally.
+    """
+    from .crossbar import solve_crossbar
+    from .device import slice_to_conductance
+
+    bk, bn = cfg.array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    sigx = slice_significances(cfg.input_spec)
+    sigw = slice_significances(cfg.weight_spec)
+    v_read = 0.2  # word-line read voltage full-scale
+    out = jnp.zeros((m, np_), jnp.float32)
+    for i in range(sxn):
+        vmax_x = 2.0 ** cfg.input_spec.bits[i] - 1.0
+        for j in range(swn):
+            bits_w = cfg.weight_spec.bits[j]
+            dg = (cfg.hgs - cfg.lgs) / (2.0**bits_w - 1.0)
+            pair = jnp.zeros((m, np_), jnp.float32)
+            for kb in range(nk):
+                # one physical (bk x bn) tile per n-block: word-line
+                # IR-drop must not span across separate arrays
+                g_tiles = slice_to_conductance(
+                    ws[j, kb * bk : (kb + 1) * bk, :]
+                    .reshape(bk, nn, bn)
+                    .transpose(1, 0, 2),
+                    bits_w, cfg.hgs, cfg.lgs,
+                )  # (nn, bk, bn)
+                vin = (
+                    xs[i, :, kb * bk : (kb + 1) * bk] / vmax_x * v_read
+                )  # (M, bk)
+
+                def solve_tile(g1):
+                    return jax.vmap(
+                        lambda v: solve_crossbar(g1, v, 2.93, 20).i_out
+                    )(vin)  # (M, bn)
+
+                res = jax.vmap(solve_tile)(g_tiles)  # (nn, M, bn)
+                y = res.transpose(1, 0, 2).reshape(m, np_) / v_read * vmax_x
+                # invert the conductance offset: I = V·(LGS + v_w·dg)
+                y = (
+                    y
+                    - jnp.sum(
+                        vin / v_read * vmax_x, axis=1, keepdims=True
+                    ) * cfg.lgs
+                ) / dg
+                kb_scale = sx[:, kb : kb + 1] * jnp.repeat(
+                    sw[kb], bn
+                )[None, :]
+                pair = pair + y * kb_scale
+            out = out + float(sigx[i] * sigw[j]) * pair
+    return out
+
+
+def dpe_matmul_prepared(
+    x: jax.Array,
+    pw: PreparedWeight,
+    n: int,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """``x @ w`` through an already-programmed weight (any leading dims)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xm = x.reshape(-1, k)
+    xs, sx = prepare_input(xm, cfg)
+    if cfg.backend == "circuit":
+        y = _circuit_matmul(xs, sx, pw.slices, pw.scale, cfg)
+    elif cfg.backend == "pallas" and cfg.mode == "faithful":
+        from repro.kernels import ops as _kops
+
+        y = _kops.sliced_matmul(
+            xs, sx, pw.slices, pw.scale,
+            input_spec=cfg.input_spec, weight_spec=cfg.weight_spec,
+            array_size=cfg.array_size, radc=cfg.radc, adc_mode=cfg.adc_mode,
+        )
+    elif cfg.mode == "faithful":
+        y = _faithful_matmul(xs, sx, pw.slices, pw.scale, cfg)
+    else:
+        y = _fast_matmul(xs, sx, pw.slices, pw.scale, cfg)
+    return y[:, :n].reshape(*lead, n)
+
+
+def dpe_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: DPEConfig,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """End-to-end simulated ``x @ w`` (programs the weight on the fly)."""
+    if cfg.mode == "digital":
+        return (
+            x.astype(jnp.float32) @ w.astype(jnp.float32)
+        )
+    if cfg.mode == "fast":
+        # single-pass folded pipeline (memory-optimal; see fold_weight_noisy)
+        lead = x.shape[:-1]
+        k, n = w.shape
+        xm = x.reshape(-1, k)
+        w_eff = fold_weight_noisy(w, cfg, key)
+        x_deq = fake_quant_input(xm, cfg).astype(w_eff.dtype)
+        y = (x_deq @ w_eff)[:, :n]
+        return y.reshape(*lead, n).astype(jnp.float32)
+    pw = prepare_weight(w, cfg, key)
+    return dpe_matmul_prepared(x, pw, w.shape[1], cfg)
+
+
+def relative_error(sim: jax.Array, ideal: jax.Array) -> jax.Array:
+    """Paper's RE metric: ||sim - ideal||_2 / ||ideal||_2."""
+    return jnp.linalg.norm(sim - ideal) / jnp.maximum(
+        jnp.linalg.norm(ideal), 1e-30
+    )

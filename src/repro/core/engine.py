@@ -1,0 +1,89 @@
+"""Dot-Product-Engine configuration — MemIntelli Table 2 defaults.
+
+``DPEConfig`` is a frozen (hashable) dataclass so it can be passed as a
+static argument through ``jax.jit`` and stored per layer — this is what
+makes the paper's *layer-wise mixed precision* (Fig. 9) work: every layer
+carries its own engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from .presets import INT8
+from .slicing import SliceSpec
+
+__all__ = ["DPEConfig", "PAPER_DEFAULTS"]
+
+
+@dataclass(frozen=True)
+class DPEConfig:
+    """Hardware + precision configuration of one dot-product engine.
+
+    Defaults are the paper's Table 2 (HGS=1e-5 S, LGS=1e-7 S, 16 levels,
+    cv=5%, 8-bit DAC, 10-bit ADC, 64x64 arrays).
+    """
+
+    # --- device / circuit (Table 2) ---
+    hgs: float = 1e-5
+    lgs: float = 1e-7
+    g_levels: int = 16
+    var: float = 0.05
+    rdac: int = 256
+    radc: int = 1024
+    array_size: tuple[int, int] = (64, 64)
+
+    # --- precision (per-layer configurable) ---
+    input_spec: SliceSpec = INT8
+    weight_spec: SliceSpec = INT8
+
+    # --- simulation mode ---
+    # "faithful": per slice-pair analog matmuls + per-block ADC (paper).
+    # "fast":     beyond-paper — slices noise-injected then digitally
+    #             folded before a single GEMM; exact when ADC is ideal.
+    # "digital":  plain matmul (software baseline).
+    mode: str = "faithful"
+    # "dynamic": ADC range = per-block max (paper's register-held
+    #            coefficients); "fullscale": fixed physical full-scale.
+    adc_mode: str = "dynamic"
+    # "program": fresh log-normal programming noise per weight update
+    #            (training re-programs every step); "off": ideal devices.
+    noise_mode: str = "program"
+    # "xla": pure-jnp lowering; "pallas": fused TPU kernel for the
+    #        faithful slice-pair loop; "circuit": every slice-pair op
+    #        solved through the IR-drop crossbar circuit model (highest
+    #        fidelity, paper Fig. 4 — small operators only).
+    backend: str = "xla"
+    # dtype for folded/effective weights in fast mode ("f32" | "bf16").
+    # bf16 rounding (<=0.4% rel) is far below the 5% programming noise.
+    store_dtype: str = "f32"
+
+    def __post_init__(self):
+        if self.mode not in ("faithful", "fast", "digital"):
+            raise ValueError(f"bad mode {self.mode!r}")
+        if self.adc_mode not in ("dynamic", "fullscale"):
+            raise ValueError(f"bad adc_mode {self.adc_mode!r}")
+        if self.noise_mode not in ("program", "off"):
+            raise ValueError(f"bad noise_mode {self.noise_mode!r}")
+        if self.backend not in ("xla", "pallas", "circuit"):
+            raise ValueError(f"bad backend {self.backend!r}")
+        if self.store_dtype not in ("f32", "bf16"):
+            raise ValueError(f"bad store_dtype {self.store_dtype!r}")
+        for spec in (self.input_spec, self.weight_spec):
+            if 2 ** max(spec.bits) > self.g_levels and self.mode != "digital":
+                raise ValueError(
+                    f"slice width {max(spec.bits)}b needs "
+                    f"{2 ** max(spec.bits)} conductance levels but device "
+                    f"has g_levels={self.g_levels}"
+                )
+        if self.hgs <= self.lgs:
+            raise ValueError("need HGS > LGS")
+
+    @property
+    def cv(self) -> float:
+        return 0.0 if self.noise_mode == "off" else self.var
+
+    def replace(self, **kw) -> "DPEConfig":
+        return replace(self, **kw)
+
+
+PAPER_DEFAULTS = DPEConfig()

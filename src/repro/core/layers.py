@@ -1,0 +1,122 @@
+"""Hardware layers with a computing graph — MemIntelli §3.4, Fig. 8.
+
+``mem_matmul`` is the paper's "hardware function": the forward pass runs
+through the simulated DPE (quantise → slice → program → analog matmul →
+ADC → recombine), while the backward pass applies the incoming error
+directly to the *full-precision* operands (straight-through estimator) —
+"the errors are directly applied to the full precision weight and input
+data to ensure the model is trainable" (paper §3.4).
+
+``MemPolicy`` implements the paper's *ultra-flexible layer-wise
+configuration* (Fig. 9): every layer name resolves to its own
+``DPEConfig`` (or ``None`` → digital), so one model can mix INT4 / INT8 /
+FP16 analog layers with full-precision digital ones.
+"""
+from __future__ import annotations
+
+import re
+import zlib
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .dpe import dpe_matmul
+from .engine import DPEConfig
+
+__all__ = ["mem_matmul", "mem_linear", "MemPolicy", "layer_key"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def mem_matmul(x: jax.Array, w: jax.Array, key: jax.Array, cfg: DPEConfig):
+    """Simulated-hardware ``x @ w`` with an STE backward pass.
+
+    Args:
+      x: (..., K) activations (any float dtype; computed in f32).
+      w: (K, N) full-precision weights.
+      key: PRNG key driving programming noise (ignored if noise off).
+      cfg: static engine config.
+    Returns:
+      (..., N) in ``x``'s dtype.
+    """
+    return _fwd_impl(x, w, key, cfg)
+
+
+def _fwd_impl(x, w, key, cfg):
+    y = dpe_matmul(x, w, cfg, key)
+    return y.astype(x.dtype)
+
+
+def _fwd(x, w, key, cfg):
+    return _fwd_impl(x, w, key, cfg), (x, w)
+
+
+def _bwd(cfg, res, g):
+    x, w = res
+    # Straight-through: gradients as if y = x @ w on the full-precision
+    # operands (paper: avoids being "trapped in the local minimum").
+    gx = (g @ w.T.astype(g.dtype)).astype(x.dtype)
+    k = x.shape[-1]
+    xf = x.reshape(-1, k)
+    gf = g.reshape(-1, g.shape[-1])
+    gw = (xf.T.astype(jnp.float32) @ gf.astype(jnp.float32)).astype(w.dtype)
+    return gx, gw, None
+
+
+mem_matmul.defvjp(_fwd, _bwd)
+
+
+def mem_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None,
+    cfg: DPEConfig | None,
+    key: jax.Array,
+) -> jax.Array:
+    """The paper's ``LinearMem``: hardware matmul + (digital) bias."""
+    if cfg is None or cfg.mode == "digital":
+        y = x @ w.astype(x.dtype)
+    else:
+        y = mem_matmul(x, w, key, cfg)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def layer_key(base: jax.Array, name: str) -> jax.Array:
+    """Deterministic per-layer PRNG key (stable across processes)."""
+    return jax.random.fold_in(base, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+@dataclass(frozen=True)
+class MemPolicy:
+    """Layer-wise precision policy (paper Fig. 9).
+
+    ``default`` applies to every hardware layer; ``overrides`` is an
+    ordered tuple of ``(regex, DPEConfig | None)`` — first match wins,
+    ``None`` means "run this layer digitally" (hybrid analog/digital
+    models, Fig. 9b).
+    """
+
+    default: DPEConfig | None = None
+    overrides: tuple[tuple[str, DPEConfig | None], ...] = field(
+        default_factory=tuple
+    )
+
+    def config_for(self, name: str) -> DPEConfig | None:
+        for pattern, cfg in self.overrides:
+            if re.search(pattern, name):
+                return cfg
+        return self.default
+
+    @property
+    def enabled(self) -> bool:
+        if self.default is not None and self.default.mode != "digital":
+            return True
+        return any(
+            c is not None and c.mode != "digital" for _, c in self.overrides
+        )
+
+
+DIGITAL = MemPolicy(default=None)

@@ -1,0 +1,41 @@
+"""Slice-method presets matching the paper's experiments.
+
+Slicings stated in the paper: INT4 -> (1,1,2), INT8 -> (1,1,2,4),
+FP16 -> (1,1,2,4,4).  The remaining FP formats follow the same pattern
+(sign slice + 1/2/4-bit slices up to the mantissa width incl. the implicit
+leading one): BF16 has an 8-bit effective mantissa, FlexPoint16+5 a 16-bit
+one, FP32 a 24-bit one.
+"""
+from __future__ import annotations
+
+from .slicing import SliceSpec
+
+INT4 = SliceSpec("int", (1, 1, 2))
+INT8 = SliceSpec("int", (1, 1, 2, 4))
+INT12 = SliceSpec("int", (1, 1, 2, 4, 4))
+INT16 = SliceSpec("int", (1, 1, 2, 4, 4, 4))
+
+# FP formats: shared-exponent pre-alignment to an INT mantissa, then the
+# same unsigned slicing.  total_bits == effective mantissa width.
+FP16 = SliceSpec("fp", (1, 1, 2, 4, 4))          # 12-bit eff. mantissa
+BF16 = SliceSpec("fp", (1, 1, 2, 4))             # 8-bit eff. mantissa
+FLEX16_5 = SliceSpec("fp", (1, 1, 2, 4, 4, 4))   # Flexpoint16+5
+FP32 = SliceSpec("fp", (1, 1, 2, 4, 4, 4, 4, 4))  # 24-bit eff. mantissa
+
+PRESETS = {
+    "int4": INT4,
+    "int8": INT8,
+    "int12": INT12,
+    "int16": INT16,
+    "fp16": FP16,
+    "bf16": BF16,
+    "flex16_5": FLEX16_5,
+    "fp32": FP32,
+}
+
+
+def spec(name: str) -> SliceSpec:
+    try:
+        return PRESETS[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown slice preset {name!r}; have {sorted(PRESETS)}")

@@ -1,0 +1,78 @@
+"""Quantisation / pre-alignment and data-converter models — MemIntelli §3.2-3.3.
+
+Two block-scale flavours (paper Fig. 12 compares them):
+
+* ``symmetric``  — INT path: ``scale = absmax / (2**(B-1) - 1)``; uses the
+  full integer range (lower relative error).
+* ``pow2``       — FP path (*pre-alignment*): the block scale is a power of
+  two derived from the block's maximum exponent, i.e. every mantissa is
+  right-shifted to the shared exponent.  Range utilisation is worse, which
+  is exactly the paper's finding that quantisation beats pre-alignment at
+  equal effective bit width.
+
+DAC/ADC: ``rdac``-level DAC quantises word-line voltages, ``radc``-level
+ADC quantises bit-line currents.  ADC supports a data-dependent ("dynamic")
+range per block — the paper keeps per-block coefficients in registers — or
+a fixed full-scale range ("fullscale", closer to silicon).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .slicing import SliceSpec
+
+_EPS = 1e-30
+
+
+def block_scale(absmax: jax.Array, spec: SliceSpec) -> jax.Array:
+    """Per-block scale from the block's max |value|."""
+    absmax = jnp.maximum(absmax, _EPS)
+    if spec.signed:
+        levels = 2.0 ** (spec.total_bits - 1) - 1.0
+    else:
+        levels = 2.0**spec.total_bits - 1.0
+    if spec.kind == "int":
+        return absmax / levels
+    # Shared-exponent pre-alignment: scale = 2**(e_max - (B-2)) so that the
+    # largest mantissa occupies the top magnitude bits.
+    e = jnp.floor(jnp.log2(absmax))
+    return jnp.exp2(e - (spec.total_bits - 2))
+
+
+def quantize(x: jax.Array, scale: jax.Array, spec: SliceSpec) -> jax.Array:
+    """Round-to-nearest integer quantisation with saturation."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def dac_quantize(v: jax.Array, rdac: int, vmax: float) -> jax.Array:
+    """DAC with ``rdac`` levels across ``[0, vmax]``.
+
+    Slice values are unsigned, so the DAC range is single-ended.  When
+    ``rdac - 1`` is a multiple of the slice's integer range the DAC is
+    exact (e.g. 8-bit DAC driving a 4-bit slice) — matching the paper's
+    defaults (rdac=256, slices ≤ 4 bits).
+    """
+    if rdac <= 1:
+        return v
+    if (rdac - 1) % max(int(vmax), 1) == 0:
+        # DAC levels are a superset of the slice's integer grid: quantisation
+        # is the identity (e.g. 8-bit DAC driving a <=4-bit slice).  Skip the
+        # float round-trip so integer slice values stay exactly integral.
+        return v
+    step = vmax / (rdac - 1)
+    return jnp.round(v / step) * step
+
+
+def adc_quantize(y: jax.Array, radc: int, ymax: jax.Array) -> jax.Array:
+    """ADC with ``radc`` levels across ``[0, ymax]`` (currents are
+    non-negative because slice values and conductances are)."""
+    if radc <= 1:
+        return y
+    step = jnp.maximum(ymax, _EPS) / (radc - 1)
+    return jnp.round(y / step) * step

@@ -1,0 +1,124 @@
+"""Bit-slicing of INT and FP (shared-exponent) data — MemIntelli §2.2 / §3.3.
+
+A B-bit signed integer is decomposed MSB-first into unsigned slices with
+widths ``bits = (b0, b1, ..)`` (``sum(bits) == B``).  For signed specs the
+first slice is the sign bit (``b0 == 1``) and carries *negative*
+significance ``-2**(B-1)`` (two's complement, Fig. 1a of the paper); all
+other slices carry ``+2**lsb_offset``.  Slice values are therefore always
+unsigned and map directly onto non-negative memristor conductances; the
+sign is recovered digitally during recombination.
+
+FP data uses the *shared-exponent pre-alignment* strategy (Fig. 1d): per
+block, every element is right-shifted to the block's maximum exponent and
+the resulting integer mantissa is sliced exactly like INT data.  The only
+difference visible at this layer is that the block scale is constrained to
+a power of two (see :mod:`repro.core.quant`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SliceSpec", "slice_int", "unslice", "slice_significances"]
+
+
+@dataclass(frozen=True)
+class SliceSpec:
+    """How one operand (input or weight) is bit-sliced.
+
+    Attributes:
+      kind:   "int" (symmetric per-block quantisation) or "fp"
+              (shared-exponent / pre-alignment, power-of-two block scale).
+      bits:   MSB-first slice widths.  For ``signed`` specs ``bits[0]`` must
+              be 1 (the sign slice).
+      signed: whether the underlying integer is two's complement.
+    """
+
+    kind: str
+    bits: tuple[int, ...]
+    signed: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("int", "fp"):
+            raise ValueError(f"kind must be int|fp, got {self.kind!r}")
+        if not self.bits or any(b < 1 for b in self.bits):
+            raise ValueError(f"bad slice widths {self.bits}")
+        if self.signed and self.bits[0] != 1:
+            raise ValueError(
+                "signed slice specs must start with a 1-bit sign slice, "
+                f"got {self.bits}"
+            )
+        if self.total_bits > 30:
+            raise ValueError("total bits > 30 would overflow int32 slicing")
+
+    @property
+    def total_bits(self) -> int:
+        return int(sum(self.bits))
+
+    @property
+    def n_slices(self) -> int:
+        return len(self.bits)
+
+    @property
+    def lsb_offsets(self) -> tuple[int, ...]:
+        """LSB position of each slice (MSB-first order)."""
+        offs, acc = [], self.total_bits
+        for b in self.bits:
+            acc -= b
+            offs.append(acc)
+        return tuple(offs)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        b = self.total_bits
+        return 2 ** (b - 1) - 1 if self.signed else 2**b - 1
+
+    def with_kind(self, kind: str) -> "SliceSpec":
+        return SliceSpec(kind, self.bits, self.signed)
+
+
+def slice_significances(spec: SliceSpec) -> np.ndarray:
+    """Signed recombination weight of every slice, MSB-first.  Static."""
+    sig = np.array([2.0**o for o in spec.lsb_offsets], dtype=np.float64)
+    if spec.signed:
+        sig[0] = -(2.0 ** (spec.total_bits - 1))
+    return sig
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def slice_int(xq: jax.Array, spec: SliceSpec) -> jax.Array:
+    """Decompose int32 ``xq`` into unsigned slices.
+
+    Args:
+      xq: integer array, values in ``[spec.qmin, spec.qmax]``.
+      spec: the slicing scheme.
+
+    Returns:
+      int32 array of shape ``(n_slices, *xq.shape)``; slice ``k`` holds the
+      unsigned field of width ``bits[k]`` (MSB-first).
+    """
+    xq = xq.astype(jnp.int32)
+    b = spec.total_bits
+    # Two's complement wrap into B bits: negatives become 2**B + x.
+    u = jnp.bitwise_and(xq, (1 << b) - 1)
+    outs = []
+    for width, off in zip(spec.bits, spec.lsb_offsets):
+        outs.append(jnp.bitwise_and(jnp.right_shift(u, off), (1 << width) - 1))
+    return jnp.stack(outs, axis=0)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def unslice(slices: jax.Array, spec: SliceSpec) -> jax.Array:
+    """Inverse of :func:`slice_int` (works on float slices too — carries
+    analog noise through the digital recombination)."""
+    sig = jnp.asarray(slice_significances(spec), dtype=jnp.float32)
+    sig = sig.reshape((spec.n_slices,) + (1,) * (slices.ndim - 1))
+    return jnp.sum(slices.astype(jnp.float32) * sig, axis=0)

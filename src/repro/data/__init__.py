@@ -1,0 +1,3 @@
+from .pipeline import synthetic_batch, batch_specs, host_local_batch
+
+__all__ = ["synthetic_batch", "batch_specs", "host_local_batch"]

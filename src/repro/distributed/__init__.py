@@ -1,0 +1,25 @@
+from .sharding import (
+    LOGICAL_RULES,
+    batch_sharding_rules,
+    cache_sharding_rules,
+    clear_rules,
+    constrain,
+    logical_sharding,
+    param_sharding_rules,
+    replicated,
+    rules_context,
+    set_rules,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "batch_sharding_rules",
+    "cache_sharding_rules",
+    "clear_rules",
+    "constrain",
+    "logical_sharding",
+    "param_sharding_rules",
+    "replicated",
+    "rules_context",
+    "set_rules",
+]

@@ -1,0 +1,59 @@
+"""Jit'd dispatch for the sliced-matmul kernel.
+
+Pads M to the kernel row tile, picks interpret mode automatically on CPU
+(the container has no TPU; ``interpret=True`` runs the kernel body in
+Python for correctness validation), and slices the padding back off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.slicing import SliceSpec
+
+from .ref import sliced_matmul_ref
+from .sliced_matmul import sliced_matmul_pallas
+
+__all__ = ["sliced_matmul", "sliced_matmul_ref"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sliced_matmul(
+    xs: jax.Array,
+    sx: jax.Array,
+    ws: jax.Array,
+    sw: jax.Array,
+    *,
+    input_spec: SliceSpec,
+    weight_spec: SliceSpec,
+    array_size: tuple[int, int],
+    radc: int,
+    adc_mode: str,
+    bm: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Faithful DPE matmul via the Pallas kernel (M auto-padded)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    sxn, m, kp = xs.shape
+    pad = (-m) % bm
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        sx = jnp.pad(sx, ((0, pad), (0, 0)))
+    y = sliced_matmul_pallas(
+        xs,
+        sx,
+        ws,
+        sw,
+        input_spec=input_spec,
+        weight_spec=weight_spec,
+        array_size=array_size,
+        radc=radc,
+        adc_mode=adc_mode,
+        bm=bm,
+        interpret=interpret,
+    )
+    return y[:m] if pad else y

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the Pallas sliced-matmul kernel.
+
+Mirrors the kernel's semantics *exactly* — including the ADC dynamic-range
+granularity of per (m-tile, k-block, n-block) — so kernel vs. oracle
+comparisons are bit-meaningful.  With ``adc_mode="fullscale"`` (static
+range) the oracle is also identical to the behavioural engine path in
+``repro.core.dpe._faithful_matmul``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.slicing import SliceSpec, slice_significances
+
+__all__ = ["sliced_matmul_ref"]
+
+_EPS = 1e-30
+
+
+def sliced_matmul_ref(
+    xs: jax.Array,  # (Sx, M, Kp)
+    sx: jax.Array,  # (M, nk)
+    ws: jax.Array,  # (Sw, Kp, Np)
+    sw: jax.Array,  # (nk, nn)
+    *,
+    input_spec: SliceSpec,
+    weight_spec: SliceSpec,
+    array_size: tuple[int, int],
+    radc: int,
+    adc_mode: str,
+    bm: int = 128,
+) -> jax.Array:
+    bk, bn = array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    nm = m // bm
+    assert m % bm == 0 and kp % bk == 0 and np_ % bn == 0
+
+    sigx = slice_significances(input_spec)
+    sigw = slice_significances(weight_spec)
+    # Blocked views: (Sx, nm, bm, nk, bk) and (Sw, nk, bk, nn, bn).
+    xsb = xs.reshape(sxn, nm, bm, nk, bk)
+    wsb = ws.reshape(swn, nk, bk, nn, bn)
+    sxb = sx.reshape(nm, bm, nk)
+
+    out = jnp.zeros((nm, bm, nn, bn), jnp.float32)
+    for i in range(sxn):
+        for j in range(swn):
+            # (nm, bm, nk, bk) x (nk, bk, nn, bn) -> (nm, bm, nk, nn, bn)
+            p = jnp.einsum(
+                "mrkb,kbnc->mrknc",
+                xsb[i].astype(jnp.float32),
+                wsb[j].astype(jnp.float32),
+            )
+            if radc > 1:
+                if adc_mode == "dynamic":
+                    ymax = jnp.maximum(
+                        jnp.max(p, axis=(1, 4), keepdims=True), _EPS
+                    )
+                else:
+                    ymax = jnp.float32(
+                        bk
+                        * (2.0 ** input_spec.bits[i] - 1.0)
+                        * (2.0 ** weight_spec.bits[j] - 1.0)
+                    )
+                step = ymax / (radc - 1)
+                p = jnp.round(p / step) * step
+            # scale per (m-row, k-block) and (k-block, n-block), then sum k.
+            p = p * sxb[:, :, :, None, None] * sw[None, None, :, :, None]
+            out = out + float(sigx[i] * sigw[j]) * jnp.sum(p, axis=2)
+    return out.reshape(m, np_)

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel for the faithful bit-sliced DPE matmul.
+
+This is the compute hot-spot of MemIntelli: every (input-slice x
+weight-slice) pair is an analog crossbar matmul whose bit-line current is
+ADC-quantised per crossbar tile, then digitally recombined with the slice
+significances and per-block scales (paper §3.3, Fig. 5/6).
+
+TPU adaptation (DESIGN.md §3): instead of the paper's S_x * S_w separate
+GEMM launches, ONE kernel walks the K dimension in ``bk``-sized crossbar
+blocks with a fused slice-pair loop.  Per grid step it holds
+
+  * the input-slice tile   (Sx, bm, bk)  in VMEM,
+  * the weight-slice tile  (Sw, bk, bn)  in VMEM,
+  * a float32 accumulator  (bm, bn)      in the output VMEM block,
+
+so X/W slice tiles are read from HBM exactly once, and all MXU matmuls
+are 128-aligned.  The simulated crossbar tile is aligned with the MXU
+tile (bk = array rows, bn = array cols), keeping per-block ADC semantics
+faithful while hardware-efficient.
+
+ADC dynamic range: the paper's "dynamic" mode takes the per-block max of
+the partial sums.  The exact behavioural path reduces over all M rows;
+the kernel necessarily reduces over its ``bm`` row tile (grid-parallel in
+M).  ``ref.py`` mirrors the kernel's tiling so kernel<->oracle comparison
+is exact; "fullscale" mode uses a static physical range and is
+granularity-independent.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") so the output tile is
+revisited and accumulated in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.slicing import SliceSpec, slice_significances
+
+__all__ = ["sliced_matmul_pallas"]
+
+_EPS = 1e-30
+
+
+def _kernel(
+    xs_ref,  # (Sx, bm, bk)
+    sx_ref,  # (bm, 1)
+    ws_ref,  # (Sw, bk, bn)
+    sw_ref,  # (1, 1)
+    out_ref,  # (bm, bn) float32 accumulator
+    *,
+    sigx: tuple[float, ...],
+    sigw: tuple[float, ...],
+    bits_x: tuple[int, ...],
+    bits_w: tuple[int, ...],
+    bk: int,
+    radc: int,
+    adc_mode: str,
+    nk: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for i in range(len(sigx)):
+        xi = xs_ref[i].astype(jnp.float32)
+        for j in range(len(sigw)):
+            wj = ws_ref[j].astype(jnp.float32)
+            p = jnp.dot(xi, wj, preferred_element_type=jnp.float32)
+            if radc > 1:
+                if adc_mode == "dynamic":
+                    ymax = jnp.maximum(jnp.max(p), _EPS)
+                else:
+                    ymax = jnp.float32(
+                        bk * (2.0 ** bits_x[i] - 1.0) * (2.0 ** bits_w[j] - 1.0)
+                    )
+                step = ymax / (radc - 1)
+                p = jnp.round(p / step) * step
+            acc = acc + jnp.float32(sigx[i] * sigw[j]) * p
+    # Per-block scales: sx is per (row, k-block), sw per (k-block, n-block).
+    acc = acc * sx_ref[...] * sw_ref[0, 0]
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "input_spec",
+        "weight_spec",
+        "array_size",
+        "radc",
+        "adc_mode",
+        "bm",
+        "interpret",
+    ),
+)
+def sliced_matmul_pallas(
+    xs: jax.Array,  # (Sx, M, Kp) slice values (DAC'd)
+    sx: jax.Array,  # (M, nk) input block scales
+    ws: jax.Array,  # (Sw, Kp, Np) programmed (noisy) weight slice values
+    sw: jax.Array,  # (nk, nn) weight block scales
+    *,
+    input_spec: SliceSpec,
+    weight_spec: SliceSpec,
+    array_size: tuple[int, int],
+    radc: int,
+    adc_mode: str,
+    bm: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused faithful DPE matmul.  Returns (M, Np) float32.
+
+    M must be a multiple of ``bm``; Kp/Np must be multiples of the array
+    tile (callers pad — see ``repro.kernels.ops``).
+    """
+    bk, bn = array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    if m % bm:
+        raise ValueError(f"M={m} not a multiple of bm={bm}")
+    if kp % bk or np_ % bn:
+        raise ValueError("K/N must be padded to the array tile")
+
+    sigx = tuple(float(s) for s in slice_significances(input_spec))
+    sigw = tuple(float(s) for s in slice_significances(weight_spec))
+
+    kernel = functools.partial(
+        _kernel,
+        sigx=sigx,
+        sigw=sigw,
+        bits_x=tuple(input_spec.bits),
+        bits_w=tuple(weight_spec.bits),
+        bk=bk,
+        radc=radc,
+        adc_mode=adc_mode,
+        nk=nk,
+    )
+    grid = (m // bm, nn, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sxn, bm, bk), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((swn, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xs, sx, ws, sw)

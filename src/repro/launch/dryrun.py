@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/roofline artifacts.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM or unsupported collective
+fails the cell.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen2-0.5b --shape train_4k --mesh single --mode mem_fast
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full matrix
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as arch_configs
+from repro.core import DPEConfig, spec as slice_spec
+from repro.core.layers import MemPolicy
+from repro.data.pipeline import batch_specs
+from repro.distributed.sharding import (
+    batch_sharding_rules,
+    cache_sharding_rules,
+    logical_spec,
+    param_sharding_rules,
+    replicated,
+    rules_context,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params
+from repro.models.model import init_cache
+from repro.optim import adafactor, adamw
+from repro.roofline.analysis import (
+    model_step_flops,
+    roofline_from_compiled,
+)
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train import init_train_state, make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+ADAFACTOR_THRESHOLD = 100e9  # params; above this AdamW f32 states exceed HBM
+BF16_PARAM_THRESHOLD = 30e9  # above this, f32 params + states exceed HBM
+
+
+def make_policy(mode: str) -> MemPolicy:
+    if mode == "digital":
+        return MemPolicy(default=None)
+    dpe_mode = "fast" if mode == "mem_fast" else "faithful"
+    cfg = DPEConfig(
+        input_spec=slice_spec("int8"),
+        weight_spec=slice_spec("int8"),
+        array_size=(128, 128),  # MXU-aligned simulated tile (DESIGN.md §3)
+        mode=dpe_mode,
+        store_dtype="bf16",
+    )
+    # embedding gather and router stay digital; everything else on the DPE
+    return MemPolicy(default=cfg, overrides=(("router", None),))
+
+
+def cell_skip_reason(cfg, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "full attention (O(S^2)) — long_500k requires sub-quadratic"
+    return None
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mode: str):
+    """Returns (lowered, compile_fn_args_info, meta)."""
+    cfg = arch_configs.get(arch)
+    sh = SHAPES[shape_name]
+    kind, seq, batch = sh["kind"], sh["seq"], sh["batch"]
+    policy = make_policy(mode)
+    chips = mesh.devices.size
+    n_params = cfg.param_count()
+    # giant models: bf16 params (f32 master lives in optimizer f32 math)
+    p_dtype = jnp.bfloat16 if n_params > BF16_PARAM_THRESHOLD else jnp.float32
+
+    with rules_context(mesh):
+        if kind == "train":
+            opt = adafactor() if n_params > ADAFACTOR_THRESHOLD else adamw()
+            step_fn = make_train_step(cfg, opt, policy)
+            state_abs = jax.eval_shape(
+                lambda: init_train_state(
+                    init_params(cfg, jax.random.PRNGKey(0), dtype=p_dtype),
+                    opt,
+                )
+            )
+            batch_abs = batch_specs(cfg, batch, seq)
+            state_sh = param_sharding_rules(state_abs, mesh)
+            batch_sh = batch_sharding_rules(batch_abs, mesh)
+            metric_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh)}
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metric_sh),
+                donate_argnums=(0,),  # state buffers alias in->out
+            )
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif kind == "prefill":
+            step_fn = make_prefill_step(cfg, policy, max_len=seq)
+            params_abs = jax.eval_shape(
+                lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=p_dtype)
+            )
+            batch_abs = batch_specs(cfg, batch, seq)
+            batch_abs.pop("labels", None)
+            params_sh = param_sharding_rules(params_abs, mesh)
+            batch_sh = batch_sharding_rules(batch_abs, mesh)
+            out_abs = jax.eval_shape(step_fn, params_abs, batch_abs)
+            logits_sh = replicated(mesh)
+            cache_sh = cache_sharding_rules(out_abs[1], mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh),
+            )
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            step_fn = make_decode_step(cfg, policy)
+            params_abs = jax.eval_shape(
+                lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=p_dtype)
+            )
+            cache_abs = jax.eval_shape(
+                lambda: init_cache(cfg, batch, seq)
+            )
+            tokens_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
+            params_sh = param_sharding_rules(params_abs, mesh)
+            cache_sh = cache_sharding_rules(cache_abs, mesh)
+            tok_sh = batch_sharding_rules(
+                {"tokens": tokens_abs}, mesh
+            )["tokens"]
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(replicated(mesh), cache_sh),
+                donate_argnums=(1,),  # KV cache aliases in->out
+            )
+            lowered = jitted.lower(params_abs, cache_abs, tokens_abs)
+    mflops = model_step_flops(cfg, batch, seq, kind)
+    return lowered, dict(chips=chips, model_flops=mflops, kind=kind)
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, mode, out_dir):
+    cfg = arch_configs.get(arch)
+    reason = cell_skip_reason(cfg, shape_name)
+    rec_path = Path(out_dir) / f"{arch}__{shape_name}__{mesh_name}__{mode}.json"
+    rec_path.parent.mkdir(parents=True, exist_ok=True)
+    if reason:
+        rec = dict(
+            arch=arch, shape=shape_name, mesh=mesh_name, mode=mode,
+            skipped=reason,
+        )
+        rec_path.write_text(json.dumps(rec, indent=2))
+        print(f"[skip] {arch} x {shape_name} ({reason})")
+        return rec
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, mode)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        report = roofline_from_compiled(
+            compiled,
+            arch=arch,
+            shape=shape_name,
+            mesh_name=mesh_name,
+            mode=mode,
+            chips=meta["chips"],
+            model_flops=meta["model_flops"],
+        )
+        mem = compiled.memory_analysis()
+        rec = report.to_dict()
+        rec.update(
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            ok=True,
+        )
+        print(
+            f"[ok]   {arch} x {shape_name} x {mesh_name} x {mode}: "
+            f"compute={report.t_compute:.4f}s memory={report.t_memory:.4f}s "
+            f"coll={report.t_collective:.4f}s dom={report.dominant} "
+            f"useful={report.useful_flops_ratio:.3f} "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+        )
+        print(f"       memory_analysis: {rec['memory_stats']}")
+    except Exception as e:
+        rec = dict(
+            arch=arch, shape=shape_name, mesh=mesh_name, mode=mode,
+            ok=False, error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+        )
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_name} x {mode}: {e}")
+    rec_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="mem_fast",
+                    choices=["digital", "mem_fast", "mem_faithful"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = (
+        arch_configs.all_arch_names()
+        if args.arch == "all"
+        else args.arch.split(",")
+    )
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        print(f"=== mesh {mesh_name}: {mesh.devices.size} devices ===")
+        for arch in archs:
+            for shape_name in shapes:
+                run_cell(arch, shape_name, mesh, mesh_name, args.mode, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): 16x16 = 256 chips per pod (data, model);
+multi-pod adds a leading pod axis (2, 16, 16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) != n:
+        if len(devices) < n:
+            raise RuntimeError(
+                f"need {n} devices for mesh {shape}, have {len(devices)} — "
+                "run under launch/dryrun.py which forces 512 host devices"
+            )
+        import numpy as np
+
+        dev = np.array(devices[:n]).reshape(shape)
+        from jax.sharding import Mesh
+
+        return Mesh(dev, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Mesh over however many devices tests have (usually 1)."""
+    import numpy as np
+
+    from jax.sharding import Mesh
+
+    n = 1
+    for s in shape:
+        n *= s
+    dev = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes)

@@ -1,0 +1,67 @@
+"""Serving driver: batched greedy generation through the (optionally
+memristive) model.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch rwkv6-1.6b --smoke --batch 4 --prompt_len 16 --gen 16 \
+        --policy mem_fast
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as arch_configs
+from repro.launch.dryrun import make_policy
+from repro.models import init_params
+from repro.serve import greedy_generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--policy", default="digital",
+                    choices=["digital", "mem_fast", "mem_faithful"])
+    args = ap.parse_args(argv)
+
+    cfg = (
+        arch_configs.get_smoke(args.arch)
+        if args.smoke
+        else arch_configs.get(args.arch)
+    )
+    policy = make_policy(args.policy)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    extra = {}
+    if cfg.vision_prefix:
+        extra["patch_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.vision_prefix, cfg.d_model),
+        )
+    if cfg.encoder is not None:
+        extra["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3),
+            (args.batch, cfg.encoder.n_frames, cfg.d_model),
+        )
+    t0 = time.time()
+    out = greedy_generate(
+        params, cfg, prompts, args.gen, policy=policy,
+        compute_dtype=jnp.float32, extra_batch=extra or None,
+    )
+    dt = time.time() - t0
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s)")
+    print("sample:", out[0][:16].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""LM-family model substrate (dense / GQA / MoE / SSM / hybrid / enc-dec).
+
+Every projection routes through :func:`repro.core.layers.mem_linear`, so
+any architecture can run on simulated memristive hardware with layer-wise
+precision — MemIntelli's technique as a first-class LM feature.
+"""
+from .config import ArchConfig, MoEConfig, SSMConfig, EncoderConfig
+from .model import init_params, forward, decode_step, loss_fn
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "EncoderConfig",
+    "init_params",
+    "forward",
+    "decode_step",
+    "loss_fn",
+]

@@ -1,0 +1,339 @@
+"""Attention: GQA/MQA/MHA + RoPE + qk-norm + sliding window + KV cache.
+
+Three execution paths:
+
+* ``attention_dense``   — full score matrix; short sequences.
+* ``attention_chunked`` — online-softmax over KV chunks (flash-style in
+  pure JAX); memory-bounded for 32k prefill.  Causality is enforced by
+  masking; chunks entirely outside a sliding window contribute zero and
+  the optimized variant skips them structurally (see §Perf).
+* ``attention_decode``  — single new token vs. a (possibly length-
+  sharded) KV cache with numerically-stable masked softmax; this is the
+  flash-decode path used by decode_32k / long_500k where the KV sequence
+  is sharded over the ``model`` mesh axis.
+
+All projections route through ``dense`` (mem-policy aware).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+
+from .common import apply_rope, dense, make_dense_params, rms_norm, rope
+
+__all__ = [
+    "init_attn_params",
+    "attention_block",
+    "decode_attention_block",
+    "init_kv_cache",
+]
+
+_NEG = -1e30
+
+
+def init_attn_params(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "q_proj": make_dense_params(ks[0], d, nh * hd, cfg.qkv_bias, dtype),
+        "k_proj": make_dense_params(ks[1], d, nkv * hd, cfg.qkv_bias, dtype),
+        "v_proj": make_dense_params(ks[2], d, nkv * hd, cfg.qkv_bias, dtype),
+        "o_proj": make_dense_params(ks[3], nh * hd, d, False, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,dh), k: (B,Skv,KV,dh) -> scores (B,KV,H/KV,Sq,Skv)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, sq, kv, h // kv, dh)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,Sq,Skv), v: (B,Skv,KV,dh) -> (B,Sq,KV*G,dh)."""
+    b, kv, g, sq, skv = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, kv * g, out.shape[-1])
+
+
+def _causal_mask(sq, skv, q_off, window):
+    qi = q_off + jnp.arange(sq)[:, None]
+    ki = jnp.arange(skv)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m &= ki > qi - window
+    return m
+
+
+def attention_dense(q, k, v, *, q_off=0, window=0, causal=True):
+    scale = q.shape[-1] ** -0.5
+    s = _gqa_scores(q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = _causal_mask(q.shape[1], k.shape[1], q_off, window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p.astype(v.dtype), v)
+
+
+def attention_chunked(
+    q, k, v, *, window=0, causal=True, q_chunk=0, kv_chunk=512,
+    schedule="masked",
+):
+    """Online-softmax attention, scanning KV chunks per Q chunk.
+
+    Memory per step is O(q_chunk * kv_chunk) instead of O(S^2).
+    ``q_chunk=0`` adapts the chunk so there are at most 32 q-chunks,
+    keeping the triangular causal schedule (below) applicable at 32k+.
+    """
+    b, sq, h, dh = q.shape
+    if q_chunk == 0:
+        q_chunk = max(512, -(-sq // 32))
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = dh**-0.5
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - skv), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nk, kv_chunk, kvh, dh)
+    vb = vp.reshape(b, nk, kv_chunk, kvh, dh)
+
+    def one_q_chunk(qi, qc, kv_limit=None):
+        """qc: (B, q_chunk, H, dh) -> attended output chunk.
+
+        ``kv_limit``: static number of kv chunks to scan (triangular
+        causal schedule); None scans all with masking."""
+        qg = qc.reshape(b, q_chunk, kvh, g, dh)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ki, kc, vc = inp
+            s = (
+                jnp.einsum("bqkgd,bskd->bkgqs", qg, kc).astype(jnp.float32)
+                * scale
+            )
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = k_pos < skv
+            if causal:
+                mask &= k_pos <= q_pos
+            if window > 0:
+                mask &= k_pos > q_pos - window
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, kvh, g, q_chunk), _NEG, jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk, dh), jnp.float32),
+        )
+        lim = nk if kv_limit is None else min(kv_limit, nk)
+        (m_run, l_run, acc), _ = lax.scan(
+            kv_step,
+            init,
+            (
+                jnp.arange(lim),
+                kb.swapaxes(0, 1)[:lim],
+                vb.swapaxes(0, 1)[:lim],
+            ),
+        )
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        # (b, kvh, g, q_chunk, dh) -> (b, q_chunk, h, dh)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, dh)
+
+    qb = qp.reshape(b, nq, q_chunk, h, dh).swapaxes(0, 1)
+    # checkpoint per q-chunk: backward recomputes the kv scan for one
+    # chunk at a time instead of saving all (q x kv) probability blocks
+    ckpt = lambda f: jax.checkpoint(
+        f, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    if schedule == "tri" and causal and sq == skv and nq <= 32:
+        # statically triangular schedule: q-chunk i only scans kv chunks
+        # 0..i — halves causal attention compute/traffic vs the masked
+        # full scan while staying reverse-differentiable (§Perf).
+        import functools
+
+        outs = [
+            ckpt(functools.partial(one_q_chunk, kv_limit=i + 1))(
+                jnp.int32(i), qb[i]
+            )
+            for i in range(nq)
+        ]
+        out = jnp.stack(outs, axis=0)
+    else:
+        f = ckpt(one_q_chunk)
+        out = lax.map(lambda t: f(t[0], t[1]), (jnp.arange(nq), qb))
+    out = out.swapaxes(0, 1).reshape(b, nq * q_chunk, h, dh)[:, :sq]
+    return out.astype(v.dtype)
+
+
+def attention_decode(q1, k_cache, v_cache, pos, *, window=0):
+    """One-token attention against the cache.
+
+    q1: (B, H, dh); caches: (B, S_max, KV, dh); pos: (B,) current length
+    (the new token's index).  Valid keys are indices <= pos (cache already
+    updated at pos).  KV-length sharding over the ``model`` axis is
+    expressed with logical constraints; XLA partitions the reductions
+    (max/sum) into the flash-decode combine.
+    """
+    b, h, dh = q1.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = dh**-0.5
+    # flash-decode shards the KV *length*; heads stay local (sharding
+    # both would duplicate the model axis in one spec)
+    k_cache = constrain(k_cache, "batch", "kv_seq", None, "head_dim")
+    v_cache = constrain(v_cache, "batch", "kv_seq", None, "head_dim")
+    qg = q1.reshape(b, kvh, g, dh)
+    # keep operands in the cache dtype and accumulate in f32: an f32
+    # operand here would make XLA hoist an f32 COPY of the whole cache
+    # out of the layer loop (2x decode HBM — §Perf, qwen1.5 decode cell)
+    s = (
+        jnp.einsum(
+            "bkgd,bskd->bkgs",
+            qg.astype(k_cache.dtype),
+            k_cache,
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )
+    ki = jnp.arange(k_cache.shape[1])[None, :]
+    mask = ki <= pos[:, None]
+    if window > 0:
+        mask &= ki > pos[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, dh)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16, layers=None):
+    n = layers if layers is not None else cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n, batch, max_len, kvh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_block(
+    p,
+    x,
+    cfg,
+    *,
+    policy,
+    rng,
+    positions,
+    name,
+    kv_in=None,
+    dense_threshold=1024,
+    attn_schedule="masked",
+):
+    """Full attention block on a sequence (train / prefill).
+
+    Returns (output, (k, v)) so callers can build the serving cache.
+    ``kv_in``: (k, v) for cross-attention (whisper decoder).
+    """
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["q_proj"], x, name=f"{name}.q", policy=policy, rng=rng)
+    q = _split_heads(q, nh, hd)
+    if kv_in is None:
+        k = dense(p["k_proj"], x, name=f"{name}.k", policy=policy, rng=rng)
+        v = dense(p["v_proj"], x, name=f"{name}.v", policy=policy, rng=rng)
+        k = _split_heads(k, nkv, hd)
+        v = _split_heads(v, nkv, hd)
+    else:
+        k, v = kv_in
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        if kv_in is None:
+            k = rms_norm(k, p["k_norm"]["scale"])
+    if kv_in is None and cfg.rope_theta > 0:
+        cos, sin = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    causal = kv_in is None and not (cfg.family == "encdec" and "enc" in name)
+    if max(s, k.shape[1]) <= dense_threshold:
+        out = attention_dense(q, k, v, window=cfg.swa_window, causal=causal)
+    else:
+        # "tri" (forward-only paths, e.g. prefill): statically triangular
+        # causal schedule, ~2x less attention work; "masked" for train —
+        # the unrolled schedule's backward raises peak memory (§Perf)
+        out = attention_chunked(
+            q, k, v, window=cfg.swa_window, causal=causal,
+            schedule=attn_schedule,
+        )
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(b, s, nh * hd)
+    y = dense(p["o_proj"], out, name=f"{name}.o", policy=policy, rng=rng)
+    return y, (k, v)
+
+
+def decode_attention_block(
+    p, x1, cfg, *, policy, rng, cache_k, cache_v, pos, name, cross=False
+):
+    """One-token attention block against the cache.
+
+    x1: (B, d) the current token's activations; cache_k/v: (B, S, KV, dh);
+    pos: (B,) index of the new token.  Returns (y, new_k1, new_v1) where
+    new_k1/v1 are this token's K/V (caller scatters into the cache) —
+    for cross-attention they are None.
+    """
+    b, d = x1.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["q_proj"], x1, name=f"{name}.q", policy=policy, rng=rng)
+    q = q.reshape(b, nh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+    new_k1 = new_v1 = None
+    if not cross:
+        k1 = dense(p["k_proj"], x1, name=f"{name}.k", policy=policy, rng=rng)
+        v1 = dense(p["v_proj"], x1, name=f"{name}.v", policy=policy, rng=rng)
+        k1 = k1.reshape(b, nkv, hd)
+        v1 = v1.reshape(b, nkv, hd)
+        if cfg.qk_norm:
+            k1 = rms_norm(k1, p["k_norm"]["scale"])
+        if cfg.rope_theta > 0:
+            cos, sin = rope(pos, hd, cfg.rope_theta)  # (B, half)
+            q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+            k1 = apply_rope(k1[:, None], cos[:, None], sin[:, None])[:, 0]
+        new_k1, new_v1 = k1, v1
+        cache_k = jax.vmap(
+            lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
+        )(cache_k, k1.astype(cache_k.dtype), pos)
+        cache_v = jax.vmap(
+            lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
+        )(cache_v, v1.astype(cache_v.dtype), pos)
+    out = attention_decode(
+        q, cache_k, cache_v, pos, window=cfg.swa_window if not cross else 0
+    )
+    y = dense(
+        p["o_proj"], out.reshape(b, nh * hd), name=f"{name}.o",
+        policy=policy, rng=rng,
+    )
+    return y, cache_k, cache_v

@@ -1,0 +1,117 @@
+"""Shared model components: norms, RoPE, activations, dense wrapper.
+
+``dense`` is the single entry point for every projection in every
+architecture — it consults the ``MemPolicy`` so any matmul can run on the
+simulated memristive DPE (the paper's technique) or digitally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import MemPolicy, layer_key, mem_linear
+
+__all__ = [
+    "dense",
+    "rms_norm",
+    "layer_norm",
+    "activation",
+    "rope",
+    "apply_rope",
+    "make_dense_params",
+    "uniform_init",
+]
+
+
+def dense(
+    params: dict,
+    x: jax.Array,
+    *,
+    name: str,
+    policy: MemPolicy,
+    rng: jax.Array,
+) -> jax.Array:
+    """Linear layer routed through the mem policy.
+
+    ``params`` holds {"w": (K, N)[, "b": (N,)]}; ``name`` is the logical
+    layer name the policy matches on; ``rng`` drives programming noise.
+    """
+    cfg = policy.config_for(name)
+    return mem_linear(x, params["w"], params.get("b"), cfg, layer_key(rng, name))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, p, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """Rotary embedding tables for given positions (any shape)."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads axis
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    if scale is None:
+        scale = (3.0 / fan_in) ** 0.5
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def make_dense_params(key, k, n, bias=False, dtype=jnp.float32):
+    p = {"w": uniform_init(key, (k, n), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def make_norm_params(d, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p

@@ -1,0 +1,495 @@
+"""Model entry points: init / forward / decode_step / loss.
+
+Layer stacks are scanned (one trace per *segment* of structurally
+identical layers) with full rematerialisation per step, so 94-layer MoE
+models compile to compact HLO and fit activation memory at 32k context.
+
+Families:
+  * decoder-only (dense / moe / ssm / hybrid / vlm) — `forward`/`decode_step`
+  * encoder-decoder (whisper) — same API; `batch["frames"]` feeds the
+    stubbed conv frontend (precomputed frame embeddings).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.layers import MemPolicy
+from repro.distributed.sharding import constrain
+
+from .attention import (
+    attention_block,
+    decode_attention_block,
+    init_attn_params,
+)
+from .common import (
+    dense,
+    make_dense_params,
+    make_norm_params,
+    norm,
+    uniform_init,
+)
+from .config import ArchConfig
+from .ssm import init_mamba_state, init_rwkv6_state
+from .transformer import (
+    _ffn_forward,
+    block_decode,
+    block_forward,
+    group_size,
+    init_block_params,
+    n_groups,
+)
+
+__all__ = [
+    "segments",
+    "init_params",
+    "forward",
+    "decode_step",
+    "loss_fn",
+    "init_cache",
+]
+
+DIGITAL = MemPolicy(default=None)
+
+
+# ---------------------------------------------------------------------------
+# segmentation: contiguous runs of structurally identical layers
+# ---------------------------------------------------------------------------
+
+def segments(cfg: ArchConfig) -> list[tuple[int, int, int]]:
+    """[(start_group, n_steps, template_layer_idx), ...]."""
+    if cfg.family == "hybrid":
+        return [(0, n_groups(cfg), 0)]
+    sigs = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    segs = []
+    start = 0
+    for i in range(1, cfg.n_layers + 1):
+        if i == cfg.n_layers or sigs[i] != sigs[start]:
+            segs.append((start, i - start, start))
+            start = i
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params = {
+        "embed": {"w": uniform_init(keys[0], (v, d), scale=0.02, dtype=dtype)},
+        "final_norm": make_norm_params(d, cfg.norm, dtype),
+        "lm_head": make_dense_params(keys[1], d, v, False, dtype),
+        "blocks": {},
+    }
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        seg_keys = jax.random.split(jax.random.fold_in(keys[2], si), steps)
+        params["blocks"][f"seg{si}"] = jax.vmap(
+            lambda k: init_block_params(k, cfg, tmpl, dtype)
+        )(seg_keys)
+    if cfg.encoder is not None:
+        params["encoder"] = _init_encoder(keys[3], cfg, dtype)
+        params["cross"] = _init_cross_stack(keys[4], cfg, dtype)
+    return params
+
+
+def _init_encoder(key, cfg, dtype):
+    ks = jax.random.split(key, cfg.encoder.n_layers + 1)
+    blocks = jax.vmap(lambda k: init_block_params(k, cfg, 0, dtype))(
+        ks[: cfg.encoder.n_layers]
+    )
+    return {
+        "blocks": blocks,
+        "final_norm": make_norm_params(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def _init_cross_stack(key, cfg, dtype):
+    """Per-decoder-layer cross-attention params (stacked)."""
+
+    def one(k):
+        p = init_attn_params(k, cfg, dtype)
+        p["norm"] = make_norm_params(cfg.d_model, cfg.norm, dtype)
+        return p
+
+    return jax.vmap(one)(jax.random.split(key, cfg.n_layers))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch, compute_dtype):
+    tokens = batch["tokens"]
+    x = jnp.take(
+        params["embed"]["w"].astype(compute_dtype), tokens, axis=0
+    )
+    if cfg.vision_prefix and "patch_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(compute_dtype), x], axis=1
+        )
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freq = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _scan_blocks(
+    params_seg, x, cfg, tmpl, *, policy, rng, positions, remat,
+    collect_states=False, attn_schedule="masked",
+):
+    steps = jax.tree_util.tree_leaves(params_seg)[0].shape[0]
+
+    def step(x, inp):
+        p_l, idx = inp
+        rng_l = jax.random.fold_in(rng, idx)
+        x, states = block_forward(
+            p_l, x, cfg, tmpl, policy=policy, rng=rng_l,
+            positions=positions, attn_schedule=attn_schedule,
+        )
+        # Megatron-SP: shard the between-layer carry (and therefore each
+        # layer's remat checkpoint) along the sequence over `model`.
+        x = constrain(x, "batch", "seq_act", "embed")
+        return x, states if collect_states else None
+
+    fn = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else step
+    x, states = lax.scan(fn, x, (params_seg, jnp.arange(steps)))
+    return x, states
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    policy: MemPolicy = DIGITAL,
+    rng=None,
+    mode: str = "train",
+    compute_dtype=jnp.bfloat16,
+    remat: bool = True,
+):
+    """Returns hidden states (B, S, d) after final norm, plus per-segment
+    serving states when ``mode == 'prefill'``."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if cfg.encoder is not None:
+        return _encdec_forward(
+            params, cfg, batch, policy=policy, rng=rng, mode=mode,
+            compute_dtype=compute_dtype, remat=remat,
+        )
+    x = _embed_inputs(params, cfg, batch, compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    all_states = {}
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        x, states = _scan_blocks(
+            params["blocks"][f"seg{si}"], x, cfg, tmpl,
+            policy=policy, rng=jax.random.fold_in(rng, si),
+            positions=positions, remat=remat,
+            collect_states=(mode == "prefill"),
+            # "tri" halves causal attention traffic/compute; a
+            # deployment can flip trains to "masked" if the unrolled
+            # schedule's backward peak memory binds (EXPERIMENTS §Perf)
+            attn_schedule="tri",
+        )
+        all_states[f"seg{si}"] = states
+    x = norm(x, params["final_norm"], cfg.norm)
+    if mode == "prefill":
+        return x, all_states
+    return x
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked cross-entropy over the sequence to bound logit memory)
+# ---------------------------------------------------------------------------
+
+def loss_fn(
+    params,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    policy: MemPolicy = DIGITAL,
+    rng=None,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = True,
+    loss_chunk: int = 256,
+):
+    """Mean next-token cross entropy; labels < 0 are masked."""
+    x = forward(
+        params, cfg, batch, policy=policy, rng=rng, mode="train",
+        compute_dtype=compute_dtype, remat=remat,
+    )
+    labels = batch["labels"]
+    if cfg.vision_prefix and "patch_embeds" in batch:
+        pref = jnp.full(
+            (labels.shape[0], cfg.vision_prefix), -1, labels.dtype
+        )
+        labels = jnp.concatenate([pref, labels], axis=1)
+    b, s, d = x.shape
+    ck = min(loss_chunk, s)
+    if s % ck:  # pad to a whole number of chunks; padded labels masked
+        pad = ck - s % ck
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
+    nck = s // ck
+    head = params["lm_head"]["w"]
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+
+    def chunk(carry, i):
+        tot, cnt = carry
+        xs = lax.dynamic_slice_in_dim(x, i * ck, ck, 1)
+        ls = lax.dynamic_slice_in_dim(labels, i * ck, ck, 1)
+        logits = dense(
+            {"w": head}, xs, name="lm_head", policy=policy, rng=rng
+        ).astype(jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - picked) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    if remat:  # recompute per-chunk logits in backward: O(chunk) memory
+        chunk = jax.checkpoint(
+            chunk, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (tot, cnt), _ = lax.scan(
+        chunk, (jnp.float32(0), jnp.float32(0)), jnp.arange(nck)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving cache & decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Allocate the serving cache pytree (what input_specs mirrors)."""
+    cache = {"pos": jnp.zeros((batch,), jnp.int32), "blocks": {}}
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        cache["blocks"][f"seg{si}"] = _seg_cache(
+            cfg, tmpl, steps, batch, max_len, dtype
+        )
+    if cfg.encoder is not None:
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        cache["cross_kv"] = {
+            "k": jnp.zeros(
+                (cfg.n_layers, batch, cfg.encoder.n_frames, kvh, hd), dtype
+            ),
+            "v": jnp.zeros(
+                (cfg.n_layers, batch, cfg.encoder.n_frames, kvh, hd), dtype
+            ),
+        }
+    return cache
+
+
+def _one_layer_cache(cfg, layer_idx, batch, max_len, dtype):
+    kind, _ = cfg.layer_kind(layer_idx)
+    if kind == "attn":
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        }
+    if cfg.ssm.kind == "rwkv6":
+        st = init_rwkv6_state(cfg, batch, 1, dtype)
+        return {"s": st["s"][0], "x_prev": st["x_prev"][0]}
+    st = init_mamba_state(cfg, batch, 1, dtype)
+    return {"h": st["h"][0], "conv": st["conv"][0]}
+
+
+def _seg_cache(cfg, tmpl, steps, batch, max_len, dtype):
+    g = group_size(cfg)
+    if g == 1:
+        template = _one_layer_cache(cfg, tmpl, batch, max_len, dtype)
+    else:
+        template = {
+            f"l{j}": _one_layer_cache(cfg, j, batch, max_len, dtype)
+            for j in range(g)
+        }
+    return jax.tree.map(
+        lambda a: jnp.zeros((steps,) + a.shape, a.dtype), template
+    )
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    cache: dict,
+    tokens: jax.Array,  # (B,) next token ids
+    *,
+    policy: MemPolicy = DIGITAL,
+    rng=None,
+    compute_dtype=jnp.bfloat16,
+):
+    """One serving step: consume `tokens`, return (logits (B,V), cache)."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if cfg.encoder is not None:
+        return _encdec_decode(
+            params, cfg, cache, tokens, policy=policy, rng=rng,
+            compute_dtype=compute_dtype,
+        )
+    x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
+    pos = cache["pos"]
+    new_cache = {"pos": pos + 1, "blocks": {}}
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        seg_p = params["blocks"][f"seg{si}"]
+        seg_c = cache["blocks"][f"seg{si}"]
+        rng_s = jax.random.fold_in(rng, si)
+
+        def step(x1, inp):
+            p_l, c_l, idx = inp
+            rng_l = jax.random.fold_in(rng_s, idx)
+            x1, st = block_decode(
+                p_l, x1, cfg, tmpl, policy=policy, rng=rng_l, pos=pos,
+                state=c_l,
+            )
+            return x1, st
+
+        x1, new_states = lax.scan(
+            step, x1, (seg_p, seg_c, jnp.arange(steps))
+        )
+        new_cache["blocks"][f"seg{si}"] = new_states
+    x1 = norm(x1, params["final_norm"], cfg.norm)
+    logits = dense(
+        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng
+    ).astype(jnp.float32)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _encdec_forward(
+    params, cfg, batch, *, policy, rng, mode, compute_dtype, remat
+):
+    frames = batch["frames"].astype(compute_dtype)  # (B, F, d) stubbed
+    b, f, d = frames.shape
+    pos_e = jnp.broadcast_to(jnp.arange(f), (b, f))
+    x = frames + _sinusoid(pos_e, d).astype(compute_dtype)
+    enc_blocks = params["encoder"]["blocks"]
+
+    def enc_step(x, inp):
+        p_l, idx = inp
+        h = norm(x, p_l["norm1"], cfg.norm)
+        y, _ = attention_block(
+            p_l["attn"], h, cfg, policy=policy,
+            rng=jax.random.fold_in(rng, 1000 + idx),
+            positions=pos_e, name="enc.attn",
+        )
+        x = x + y
+        h = norm(x, p_l["norm2"], cfg.norm)
+        x = x + _ffn_forward(
+            p_l, h, cfg, policy=policy,
+            rng=jax.random.fold_in(rng, 2000 + idx), name="enc",
+        )
+        return x, None
+
+    nenc = cfg.encoder.n_layers
+    if remat:
+        enc_step = jax.checkpoint(
+            enc_step, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = lax.scan(enc_step, x, (enc_blocks, jnp.arange(nenc)))
+    enc_out = norm(x, params["encoder"]["final_norm"], cfg.norm)
+
+    tokens = batch["tokens"]
+    bt, s = tokens.shape
+    xd = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
+    pos_d = jnp.broadcast_to(jnp.arange(s), (bt, s))
+    xd = xd + _sinusoid(pos_d, d).astype(compute_dtype)
+
+    def dec_step(xd, inp):
+        p_l, p_x, idx = inp
+        rng_l = jax.random.fold_in(rng, idx)
+        xd, st = block_forward(
+            p_l, xd, cfg, 0, policy=policy, rng=rng_l, positions=pos_d
+        )
+        # cross-attention sublayer
+        h = norm(xd, p_x["norm"], cfg.norm)
+        kx = dense(p_x["k_proj"], enc_out, name="dec.cross.k", policy=policy, rng=rng_l)
+        vx = dense(p_x["v_proj"], enc_out, name="dec.cross.v", policy=policy, rng=rng_l)
+        kx = kx.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+        vx = vx.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+        y, _ = attention_block(
+            p_x, h, cfg, policy=policy, rng=rng_l, positions=pos_d,
+            name="dec.cross", kv_in=(kx, vx),
+        )
+        xd = xd + y
+        return xd, (st, (kx, vx))
+
+    if remat:
+        dec_step = jax.checkpoint(
+            dec_step, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    xd, (self_states, cross_kv) = lax.scan(
+        dec_step,
+        xd,
+        (params["blocks"]["seg0"], params["cross"], jnp.arange(cfg.n_layers)),
+    )
+    xd = norm(xd, params["final_norm"], cfg.norm)
+    if mode == "prefill":
+        return xd, {
+            "seg0": self_states,
+            "cross_kv": {"k": cross_kv[0], "v": cross_kv[1]},
+        }
+    return xd
+
+
+def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype):
+    d = cfg.d_model
+    x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
+    pos = cache["pos"]
+    x1 = x1 + _sinusoid(pos, d).astype(compute_dtype)
+    new_cache = {"pos": pos + 1, "blocks": {}, "cross_kv": cache["cross_kv"]}
+    seg_p = params["blocks"]["seg0"]
+    seg_c = cache["blocks"]["seg0"]
+    fr = cfg.encoder.n_frames
+
+    def step(x1, inp):
+        p_l, p_x, c_l, kx, vx, idx = inp
+        rng_l = jax.random.fold_in(rng, idx)
+        x1, st = block_decode(
+            p_l, x1, cfg, 0, policy=policy, rng=rng_l, pos=pos, state=c_l
+        )
+        h = norm(x1, p_x["norm"], cfg.norm)
+        enc_pos = jnp.full_like(pos, fr - 1)
+        y, _, _ = decode_attention_block(
+            p_x, h, cfg, policy=policy, rng=rng_l, cache_k=kx, cache_v=vx,
+            pos=enc_pos, name="dec.cross", cross=True,
+        )
+        x1 = x1 + y
+        return x1, st
+
+    x1, new_states = lax.scan(
+        step,
+        x1,
+        (
+            seg_p,
+            params["cross"],
+            seg_c,
+            cache["cross_kv"]["k"],
+            cache["cross_kv"]["v"],
+            jnp.arange(cfg.n_layers),
+        ),
+    )
+    new_cache["blocks"]["seg0"] = new_states
+    x1 = norm(x1, params["final_norm"], cfg.norm)
+    logits = dense(
+        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng
+    ).astype(jnp.float32)
+    return logits, new_cache

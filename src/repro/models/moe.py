@@ -1,0 +1,144 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded dispatch.
+
+Dispatch is *per batch row* (sort-based, GShard/Switch style): each row's
+``S`` tokens route to ``top_k`` experts with per-expert capacity
+``C = ceil(top_k * S / E * capacity_factor)``.  Keeping dispatch local to
+a row means the gather/scatter pairs partition cleanly under pjit when
+the batch axis is sharded over (pod, data) and the expert axis of the
+weight/buffer tensors over ``model`` (expert parallelism): the expert
+einsum is fully local and the combine reduces over the model axis.
+
+Overflowing tokens are dropped (their combine weight contributes zero) —
+the standard capacity-factor trade-off; EXPERIMENTS.md reports the drop
+statistics helper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from .common import activation, dense, make_dense_params, uniform_init
+
+__all__ = ["init_moe_params", "moe_block", "moe_capacity"]
+
+
+def moe_capacity(cfg_moe, tokens_per_row: int) -> int:
+    c = int(
+        tokens_per_row * cfg_moe.top_k / cfg_moe.n_experts
+        * cfg_moe.capacity_factor
+    )
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def init_moe_params(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": make_dense_params(ks[0], d, e, False, dtype),
+        "experts": {
+            "wi": uniform_init(ks[1], (e, d, f), dtype=dtype),
+            "wg": uniform_init(ks[2], (e, d, f), dtype=dtype),
+            "wo": uniform_init(ks[3], (e, f, d), dtype=dtype),
+        },
+    }
+
+
+def _dispatch_indices(eidx, n_experts, capacity):
+    """Per-row dispatch bookkeeping.
+
+    eidx: (T, k) int32 expert choice per token.
+    Returns (buf_token_idx (E*C,), slot (T*k,), valid (T*k,), token (T*k,)).
+    """
+    t, k = eidx.shape
+    flat_e = eidx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.cumsum(counts) - counts  # exclusive cumsum
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    valid_sorted = pos < capacity
+    slot_sorted = sorted_e * capacity + jnp.minimum(pos, capacity - 1)
+    token_sorted = order // k
+    # scatter: buffer slot -> source token (T = padding row)
+    buf_token_idx = jnp.full((n_experts * capacity,), t, jnp.int32)
+    # out-of-bounds index + mode="drop" discards overflowing tokens
+    buf_token_idx = buf_token_idx.at[
+        jnp.where(valid_sorted, slot_sorted, n_experts * capacity)
+    ].set(token_sorted, mode="drop")
+    # invert the sort for per-choice combine
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(t * k))
+    slot = slot_sorted[inv]
+    valid = valid_sorted[inv]
+    token = jnp.arange(t * k, dtype=jnp.int32) // k
+    return buf_token_idx, slot, valid, token
+
+
+def moe_block(p, x, cfg, *, policy, rng, name):
+    """x: (B, S, d) -> (B, S, d)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e = m.n_experts
+    cap = moe_capacity(m, s)
+    # keep the router output in the stream dtype: an f32 cast here makes
+    # the router's input-cotangent f32 and promotes the entire backward
+    # carry chain (and its psums) to f32 (§Perf, kimi cell)
+    gates = dense(p["router"], x, name=f"{name}.router", policy=policy, rng=rng)
+    probs = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)  # (B, S, k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+    )
+
+    def dispatch_row(xr, er):
+        buf_idx, slot, valid, token = _dispatch_indices(er, e, cap)
+        xpad = jnp.concatenate([xr, jnp.zeros((1, d), xr.dtype)], axis=0)
+        buf = xpad[buf_idx]  # (E*C, d)
+        return buf, slot, valid, token
+
+    buf, slot, valid, token = jax.vmap(dispatch_row)(x, top_e)
+    buf = buf.reshape(b, e, cap, d)
+    buf = constrain(buf, "batch", "experts", None, "embed")
+    wi, wg, wo = p["experts"]["wi"], p["experts"]["wg"], p["experts"]["wo"]
+    mem_cfg = policy.config_for(f"{name}.experts")
+    if mem_cfg is not None and mem_cfg.mode != "digital":
+        # the paper's technique on the expert matmuls: vmap the simulated
+        # DPE over the (sharded) expert axis
+        from repro.core.layers import layer_key, mem_matmul
+
+        key = layer_key(rng, f"{name}.experts")
+        bufe = buf.swapaxes(0, 1).reshape(e, b * cap, d)  # (E, T, d)
+        mm = lambda x2, w2, i: mem_matmul(
+            x2, w2, jax.random.fold_in(key, i), mem_cfg
+        )
+        h = jax.vmap(mm)(bufe, wi, jnp.arange(e))
+        g = jax.vmap(mm)(bufe, wg, jnp.arange(e) + e)
+        h = activation(g, cfg.act) * h
+        out = jax.vmap(mm)(h, wo, jnp.arange(e) + 2 * e)
+        out = out.reshape(e, b, cap, d).swapaxes(0, 1)
+    else:
+        h = jnp.einsum("becd,edf->becf", buf, wi.astype(buf.dtype))
+        g = jnp.einsum("becd,edf->becf", buf, wg.astype(buf.dtype))
+        h = activation(g, cfg.act) * h
+        out = jnp.einsum("becf,efd->becd", h, wo.astype(buf.dtype))
+    out = constrain(out, "batch", "experts", None, "embed")
+    out = out.reshape(b, e * cap, d)
+
+    # Combine looping over the k choices: peak memory O(B*S*d) per choice
+    # instead of materialising the (B, S*k, d) gathered tensor at once.
+    wts = top_p.reshape(b, s, m.top_k).astype(out.dtype)
+    slot_k = slot.reshape(b, s, m.top_k)
+    valid_k = valid.reshape(b, s, m.top_k)
+    y = jnp.zeros((b, s, d), out.dtype)
+    for kk in range(m.top_k):
+
+        def gather_row(outr, sl):
+            return outr[sl]
+
+        vals = jax.vmap(gather_row)(out, slot_k[:, :, kk])  # (B, S, d)
+        wk = (wts[:, :, kk] * valid_k[:, :, kk].astype(out.dtype))
+        y = y + vals * wk[:, :, None]
+    y = constrain(y, "batch", "seq", "embed")
+    return y.astype(x.dtype)

@@ -1,0 +1,351 @@
+"""State-space blocks: RWKV6 (Finch) time-mix and Mamba (S6) selective scan.
+
+Both are *recurrences with data-dependent transition* — the elementwise
+scan core stays digital (there is no matmul to put on a crossbar — see
+DESIGN.md §Arch-applicability); all the surrounding projections route
+through the mem-policy-aware ``dense``.
+
+RWKV6 (arXiv:2404.05892): per head h with key/value dims (N, N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   o_t = r_t (S_t + u k_t^T v_t)
+with the *data-dependent decay* w_t = exp(-exp(w0 + lora(x_t))) — the
+signature RWKV6 feature — and token-shift input mixing.
+
+Mamba: x -> in_proj -> causal depthwise conv -> selective SSM
+(dt, B, C data-dependent; A learned) -> gated output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense, make_dense_params, uniform_init
+
+__all__ = [
+    "init_rwkv6_params",
+    "rwkv6_block",
+    "rwkv6_decode",
+    "init_rwkv6_state",
+    "init_mamba_params",
+    "mamba_block",
+    "mamba_decode",
+    "init_mamba_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def _rwkv_dims(cfg):
+    hd = cfg.ssm.head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def init_rwkv6_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    nh, hd = _rwkv_dims(cfg)
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": uniform_init(ks[0], (5, d), scale=0.5, dtype=dtype),
+        "r_proj": make_dense_params(ks[1], d, d, False, dtype),
+        "k_proj_ssm": make_dense_params(ks[2], d, d, False, dtype),
+        "v_proj_ssm": make_dense_params(ks[3], d, d, False, dtype),
+        "g_proj": make_dense_params(ks[4], d, d, False, dtype),
+        "w0": uniform_init(ks[5], (d,), scale=1.0, dtype=dtype),
+        "w_lora_a": uniform_init(ks[6], (d, lora), dtype=dtype),
+        "w_lora_b": uniform_init(ks[7], (lora, d), scale=0.01, dtype=dtype),
+        "u": uniform_init(ks[8], (nh, hd), scale=0.5, dtype=dtype),
+        "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "wkv_out": make_dense_params(ks[9], d, d, False, dtype),
+        # channel-mix (FFN) params live in the transformer block
+    }
+
+
+def _rwkv6_mix(p, x, x_prev):
+    """Token-shift DDLerp (simplified single-LoRA variant, see module doc).
+
+    x: (B, S, d); x_prev: x shifted right by one (B, S, d).
+    Returns mixed inputs for (r, k, v, w, g).
+    """
+    dx = x_prev - x
+    mu = p["mu"].astype(x.dtype)  # (5, d)
+    return tuple(x + dx * mu[i] for i in range(5))
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV6 recurrence, one token per step.  r/k/v/w: (B, S, H, N); u:
+    (H, N); state: (B, H, N, N) [key x value].  Returns
+    (out (B,S,H,N), new state).  O(S) state round-trips — decode path and
+    oracle for the chunked form."""
+
+    def step(s, t):
+        rt, kt, vt, wt = t  # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, N, N)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))  # (S, B, H, N)
+    state, outs = lax.scan(step, state, xs)
+    return outs.swapaxes(0, 1), state  # (B, S, H, N)
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int = 32):
+    """Chunk-parallel WKV6 (beyond-paper §Perf optimisation).
+
+    Per chunk of C tokens the recurrence unrolls to
+
+        out_t = (r_t ⊙ W_{t-1}) S_0                       (inter, 1 matmul)
+              + Σ_{s<t} [Σ_n r_tn k_sn e^{LW_{t-1,n}-LW_{s,n}}] v_s  (intra)
+              + (r_t·(u ⊙ k_t)) v_t                       (bonus diagonal)
+        S_C   = e^{LW_C} ⊙ S_0 + Σ_s (k_s ⊙ e^{LW_C-LW_s})^T v_s
+
+    with LW the inclusive cumsum of log-decays.  Every exponent is ≤ 0
+    (t-1 ≥ s and C ≥ s), so the form is overflow-safe for arbitrary
+    data-dependent decay.  The state is read/written ONCE per chunk
+    instead of 3x per token: HBM traffic for the recurrence drops ~C
+    times, at the cost of O(C^2 N) MXU-friendly intra-chunk work.
+    """
+    b, s, h, n = r.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(
+            w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0
+        )
+    nc = r.shape[1] // c
+    resh = lambda a: a.reshape(b, nc, c, h, n).swapaxes(0, 1)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)  # strict lower: s <= t-1
+
+    def chunk_step(s0, t):
+        rt, kt, vt, wt = t  # (B, C, H, N)
+        # 1e-37 is the clamp: anything smaller is f32-subnormal and
+        # flushes to zero, making log() = -inf
+        logw = jnp.log(jnp.maximum(wt, 1e-37))
+        lw = jnp.cumsum(logw, axis=1)  # inclusive (B,C,H,N)
+        lw_prev = lw - logw
+        # inter-chunk: state read once
+        r_dec = rt * jnp.exp(lw_prev)
+        out = jnp.einsum("bthn,bhnv->bthv", r_dec, s0)
+        # intra-chunk pairwise (all exponents <= 0 under the mask)
+        d = lw_prev[:, :, None] - lw[:, None, :]  # (B,C_t,C_s,H,N)
+        # mask BEFORE exp: d > 0 for s > t-1 would overflow
+        # (bf16 here is a TPU-only win: XLA:TPU fuses the convert into
+        # the exp producer; the CPU dry-run materializes it separately
+        # and the byte proxy regresses 17% — see EXPERIMENTS.md §Perf)
+        mask = tri[None, :, :, None, None]
+        e = jnp.exp(jnp.where(mask, d, -jnp.inf))
+        a_intra = jnp.einsum("bthn,bshn,btshn->bths", rt, kt, e)
+        out = out + jnp.einsum("bths,bshv->bthv", a_intra, vt)
+        # bonus diagonal
+        diag = jnp.einsum("bthn,bthn->bth", rt, u[None, None] * kt)
+        out = out + diag[..., None] * vt
+        # state update: exponents lw_C - lw_s <= 0
+        lw_end = lw[:, -1:]
+        k_dec = kt * jnp.exp(lw_end - lw)
+        s_new = jnp.exp(lw_end[:, 0])[..., None] * s0 + jnp.einsum(
+            "bshn,bshv->bhnv", k_dec, vt
+        )
+        return s_new, out
+
+    # checkpoint per chunk: the backward otherwise saves every chunk's
+    # (B,C,C,H,N) pairwise tensors stacked over all chunks (~17 GB/chip
+    # at 4k seq / 32-token chunks) — recompute them per chunk instead
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    state, outs = lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    outs = outs.swapaxes(0, 1).reshape(b, nc * c, h, n)[:, :s]
+    return outs, state
+
+
+def rwkv6_block(p, x, cfg, *, policy, rng, name, state=None, x_prev=None):
+    """Full-sequence RWKV6 time-mix.  Returns (y, (state, x_last))."""
+    b, s, d = x.shape
+    nh, hd = _rwkv_dims(cfg)
+    if x_prev is None:
+        first = jnp.zeros((b, 1, d), x.dtype)
+    else:
+        first = x_prev[:, None, :]
+    x_shift = jnp.concatenate([first, x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _rwkv6_mix(p, x, x_shift)
+    r = dense(p["r_proj"], xr, name=f"{name}.r", policy=policy, rng=rng)
+    k = dense(p["k_proj_ssm"], xk, name=f"{name}.k", policy=policy, rng=rng)
+    v = dense(p["v_proj_ssm"], xv, name=f"{name}.v", policy=policy, rng=rng)
+    g = jax.nn.silu(
+        dense(p["g_proj"], xg, name=f"{name}.g", policy=policy, rng=rng)
+    )
+    # data-dependent decay (RWKV6 signature)
+    wlo = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + wlo))  # (B,S,d)
+
+    shp = (b, s, nh, hd)
+    r4, k4, v4, w4 = (a.reshape(shp) for a in (r, k, v, w))
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    wkv = _wkv_chunked if s >= 64 else _wkv_scan
+    out, state = wkv(
+        r4.astype(jnp.float32),
+        k4.astype(jnp.float32),
+        v4.astype(jnp.float32),
+        w4.astype(jnp.float32),
+        p["u"].astype(jnp.float32),
+        state,
+    )
+    out = out.reshape(b, s, d)
+    # per-head group norm
+    mu = jnp.mean(out.reshape(b, s, nh, hd), axis=-1, keepdims=True)
+    var = jnp.var(out.reshape(b, s, nh, hd), axis=-1, keepdims=True)
+    out = ((out.reshape(b, s, nh, hd) - mu) * lax.rsqrt(var + 1e-5)).reshape(
+        b, s, d
+    )
+    out = out * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    out = (out.astype(x.dtype)) * g
+    y = dense(p["wkv_out"], out, name=f"{name}.o", policy=policy, rng=rng)
+    return y, (state, x[:, -1, :])
+
+
+def init_rwkv6_state(cfg, batch, layers, dtype=jnp.float32):
+    nh, hd = _rwkv_dims(cfg)
+    return {
+        "s": jnp.zeros((layers, batch, nh, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((layers, batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_decode(p, x1, cfg, *, policy, rng, name, state, x_prev):
+    """Single-token step.  x1: (B, d); state: (B,H,N,N).  Returns
+    (y1, new_state, new_x_prev)."""
+    y, (state, x_last) = rwkv6_block(
+        p,
+        x1[:, None, :],
+        cfg,
+        policy=policy,
+        rng=rng,
+        name=name,
+        state=state,
+        x_prev=x_prev,
+    )
+    return y[:, 0], state, x_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = _mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": make_dense_params(ks[0], d, d_in, False, dtype),
+        "in_proj_z": make_dense_params(ks[1], d, d_in, False, dtype),
+        "conv": {
+            "w": uniform_init(ks[2], (d_conv, d_in), dtype=dtype),
+            "b": jnp.zeros((d_in,), dtype),
+        },
+        "x_proj": make_dense_params(
+            ks[3], d_in, dt_rank + 2 * d_state, False, dtype
+        ),
+        "dt_proj": make_dense_params(ks[4], dt_rank, d_in, True, dtype),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_in,), dtype),
+        "out_proj": make_dense_params(ks[5], d_in, d, False, dtype),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C).  cache: (B,K-1,C)."""
+    k = w.shape[0]
+    w = w.astype(x.dtype)
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_cache = xp[:, -(k - 1) :, :] if k > 1 else None
+    return out + b.astype(x.dtype), new_cache
+
+
+def mamba_block(p, x, cfg, *, policy, rng, name, state=None, conv_cache=None):
+    """Full-sequence selective scan.  Returns (y, (ssm_state, conv_cache))."""
+    b, s, d = x.shape
+    d_in, dt_rank, d_state, d_conv = _mamba_dims(cfg)
+    xin = dense(p["in_proj"], x, name=f"{name}.in", policy=policy, rng=rng)
+    z = dense(p["in_proj_z"], x, name=f"{name}.z", policy=policy, rng=rng)
+    xc, new_conv = _causal_conv(xin, p["conv"]["w"], p["conv"]["b"], conv_cache)
+    xc = jax.nn.silu(xc)
+    xdbc = dense(p["x_proj"], xc, name=f"{name}.xp", policy=policy, rng=rng)
+    dt_low = xdbc[..., :dt_rank]
+    bmat = xdbc[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    cmat = xdbc[..., dt_rank + d_state :].astype(jnp.float32)
+    dt = dense(p["dt_proj"], dt_low, name=f"{name}.dt", policy=policy, rng=rng)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,d_in)
+    a = -jnp.exp(p["a_log"])  # (d_in, N)
+
+    def step(h, t):
+        xt, dtt, bt, ct = t  # (B,d_in), (B,d_in), (B,N), (B,N)
+        da = jnp.exp(dtt[..., None] * a[None])  # (B,d_in,N)
+        dbx = (dtt * xt)[..., None] * bt[:, None, :]  # (B,d_in,N)
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    if state is None:
+        state = jnp.zeros((b, d_in, d_state), jnp.float32)
+    xs = (
+        xc.astype(jnp.float32).swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        bmat.swapaxes(0, 1),
+        cmat.swapaxes(0, 1),
+    )
+    # unroll: XLA fuses the unrolled elementwise updates so the (B,
+    # d_in, N) state round-trips HBM once per 8 tokens, not once per
+    # token (§Perf; the exact chunked form needs SSD-style decomposition
+    # because dA varies per (d_in, N) pair — future Pallas kernel)
+    state, ys = lax.scan(step, state, xs, unroll=8 if s >= 64 else 1)
+    y = ys.swapaxes(0, 1) + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y, name=f"{name}.out", policy=policy, rng=rng)
+    if new_conv is None:
+        new_conv = jnp.zeros((b, d_conv - 1, d_in), x.dtype)
+    return out, (state, new_conv)
+
+
+def init_mamba_state(cfg, batch, layers, dtype=jnp.bfloat16):
+    d_in, dt_rank, d_state, d_conv = _mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((layers, batch, d_in, d_state), jnp.float32),
+        "conv": jnp.zeros((layers, batch, d_conv - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(p, x1, cfg, *, policy, rng, name, state, conv_cache):
+    y, (state, conv_cache) = mamba_block(
+        p,
+        x1[:, None, :],
+        cfg,
+        policy=policy,
+        rng=rng,
+        name=name,
+        state=state,
+        conv_cache=conv_cache,
+    )
+    return y[:, 0], state, conv_cache

@@ -1,0 +1,17 @@
+from .optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    cosine_schedule,
+    clip_by_global_norm,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "cosine_schedule",
+    "clip_by_global_norm",
+]

@@ -1,0 +1,181 @@
+"""Optimizers (pure JAX, optax-style API but self-contained).
+
+* ``adamw``     — f32 moments; default for <=35B-parameter models.
+* ``adafactor`` — factored second moment, no first moment by default;
+  used for the 1T-class MoE models where AdamW's f32 states exceed the
+  512x16GB HBM budget (EXPERIMENTS.md §Dry-run).
+* ``sgd``       — momentum SGD for the paper-repro apps (LeNet-style).
+
+Optimizer states inherit the parameter sharding leaf-by-leaf (ZeRO-1
+behaviour falls out of pjit: states shard exactly like params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "cosine_schedule",
+    "clip_by_global_norm",
+]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr, warmup, total, min_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    # multiply in the gradient's own dtype: avoids materialising a full
+    # f32 copy of every (possibly multi-TB) bf16 gradient leaf
+    return (
+        jax.tree.map(lambda g: g * scale.astype(g.dtype), grads),
+        norm,
+    )
+
+
+def adamw(
+    lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01, clip=1.0
+):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        if clip:
+            grads, _ = clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip=1.0, min_dim=128):
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    Matrices with both dims >= ``min_dim`` store row/col factors only —
+    O(n+m) state instead of O(nm); smaller leaves fall back to full
+    second moment.  No first moment (momentum-free), the configuration
+    used for trillion-parameter training here.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        if clip:
+            grads, _ = clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t**-decay
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "r" in s:
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(
+                    jnp.mean(r, axis=-1, keepdims=True), eps
+                )
+                v = rc[..., None] * c[..., None, :]
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": v}
+            upd = g * jax.lax.rsqrt(v + eps)
+            # update clipping (RMS <= 1) as in the paper
+            rms = jnp.sqrt(jnp.mean(upd * upd) + eps)
+            upd = upd / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), new_s
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_f = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"f": new_f}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr=1e-2, momentum=0.9, clip=0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if clip:
+            grads, _ = clip_by_global_norm(grads, clip)
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m}
+
+    return Optimizer(init=init, update=update)

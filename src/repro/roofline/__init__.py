@@ -1,0 +1,8 @@
+from .analysis import (
+    HW,
+    collective_bytes,
+    roofline_from_compiled,
+    RooflineReport,
+)
+
+__all__ = ["HW", "collective_bytes", "roofline_from_compiled", "RooflineReport"]

@@ -1,0 +1,113 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "h2o-danube-1.8b", "qwen2-0.5b", "qwen3-4b", "qwen1.5-32b",
+    "rwkv6-1.6b", "qwen3-moe-235b-a22b", "kimi-k2-1t-a32b",
+    "whisper-tiny", "jamba-v0.1-52b", "phi-3-vision-4.2b",
+]
+
+FIX_HINTS = {
+    ("memory",): "fuse attention score traffic (flash kernel) / shrink "
+    "f32 transients",
+    ("collective",): "overlap FSDP weight gathers with compute; reduce "
+    "EP combine volume (all_to_all instead of psum)",
+    ("compute",): "cut causal-masking waste (triangular schedule); int8 "
+    "MXU path for slice matmuls",
+}
+
+
+def load(out_dir: Path, mesh: str, mode: str):
+    recs = {}
+    for p in out_dir.glob(f"*__{mesh}__{mode}.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def _fmt_t(v):
+    if v >= 1:
+        return f"{v:.2f}"
+    return f"{v*1e3:.1f}m" if v >= 1e-3 else f"{v*1e6:.0f}u"
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant |"
+        " useful | MFU@roof | HBM GB/chip (args+out+temp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r.get("skipped"):
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | skipped | — | — |"
+                    f" {r['skipped'][:40]} |"
+                )
+                continue
+            if not r.get("ok"):
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | FAILED | — | — | "
+                    f"{r.get('error','')[:40]} |"
+                )
+                continue
+            m = r["memory_stats"]
+            hbm = (
+                m.get("argument_size_in_bytes", 0)
+                + m.get("output_size_in_bytes", 0)
+                + m.get("temp_size_in_bytes", 0)
+            ) / 1e9
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_t(r['t_compute'])} | "
+                f"{_fmt_t(r['t_memory'])} | {_fmt_t(r['t_collective'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+                f"{r['mfu_at_roofline']*100:.2f}% | {hbm:.1f} |"
+            )
+    return "\n".join(lines)
+
+
+def summary_stats(recs):
+    ok = [r for r in recs.values() if r.get("ok")]
+    dom = {}
+    for r in ok:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    worst = sorted(ok, key=lambda r: r["mfu_at_roofline"])[:5]
+    most_coll = sorted(
+        ok, key=lambda r: -(r["t_collective"] /
+                            max(r["t_compute"] + r["t_memory"], 1e-12))
+    )[:5]
+    return dom, worst, most_coll
+
+
+def main():
+    out_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    mode = sys.argv[2] if len(sys.argv) > 2 else "mem_fast"
+    for mesh in ("pod16x16", "pod2x16x16"):
+        recs = load(out_dir, mesh, mode)
+        if not recs:
+            continue
+        print(f"\n### {mesh} ({mode})\n")
+        print(roofline_table(recs))
+        dom, worst, most_coll = summary_stats(recs)
+        print(f"\ndominant-term histogram: {dom}")
+        print("worst MFU cells:",
+              [(r['arch'], r['shape'], f"{r['mfu_at_roofline']*100:.2f}%")
+               for r in worst])
+        print("most collective-bound:",
+              [(r['arch'], r['shape']) for r in most_coll])
+
+
+if __name__ == "__main__":
+    main()

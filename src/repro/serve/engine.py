@@ -1,0 +1,132 @@
+"""Serving: prefill (build cache + first logits) and decode steps.
+
+``prefill_32k`` lowers ``prefill_step``; ``decode_32k`` / ``long_500k``
+lower ``decode_step`` (one new token against a KV cache of seq_len, the
+cache's KV-length axis sharded over the ``model`` mesh axis =
+flash-decode).  Programming noise is *static* across decode steps
+(devices are programmed once for inference) — keys derive from layer
+names only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import MemPolicy
+from repro.models import decode_step as model_decode
+from repro.models import forward
+from repro.models.config import ArchConfig
+from repro.models.model import DIGITAL, init_cache, segments
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+
+
+def _cache_from_prefill(cfg, states, batch, s_prefill, max_len, dtype):
+    """Pad per-layer prefill KV to max_len and assemble the cache."""
+    cache = {
+        "pos": jnp.full((batch,), s_prefill, jnp.int32),
+        "blocks": {},
+    }
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        st = states[f"seg{si}"]
+
+        def pad_kv(path, x):
+            # attention K/V leaves ("k"/"v"): (steps, B, S, KV, hd) ->
+            # pad the length axis to max_len; SSM states pass through.
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key in ("k", "v") and x.ndim == 5:
+                pad = max_len - x.shape[2]
+                return jnp.pad(
+                    x.astype(dtype),
+                    ((0, 0),) * 2 + ((0, pad),) + ((0, 0),) * 2,
+                )
+            return x
+
+        cache["blocks"][f"seg{si}"] = jax.tree_util.tree_map_with_path(
+            pad_kv, st
+        )
+    if cfg.encoder is not None and "cross_kv" in states:
+        cache["cross_kv"] = jax.tree.map(
+            lambda x: x.astype(dtype), states["cross_kv"]
+        )
+    return cache
+
+
+def make_prefill_step(
+    cfg: ArchConfig,
+    policy: MemPolicy | None = None,
+    *,
+    max_len: int | None = None,
+    compute_dtype=jnp.bfloat16,
+    cache_dtype=jnp.bfloat16,
+    remat: bool = True,
+):
+    policy = policy or DIGITAL
+    rng = jax.random.PRNGKey(0)  # static programming noise for serving
+
+    def prefill_step(params, batch):
+        hidden, states = forward(
+            params, cfg, batch, policy=policy, rng=rng, mode="prefill",
+            compute_dtype=compute_dtype, remat=remat,
+        )
+        b = hidden.shape[0]
+        s = hidden.shape[1]
+        logits = (
+            hidden[:, -1] @ params["lm_head"]["w"].astype(hidden.dtype)
+        ).astype(jnp.float32)
+        ml = max_len or s
+        cache = _cache_from_prefill(cfg, states, b, s, ml, cache_dtype)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ArchConfig,
+    policy: MemPolicy | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+):
+    policy = policy or DIGITAL
+    rng = jax.random.PRNGKey(0)
+
+    def decode_fn(params, cache, tokens):
+        return model_decode(
+            params, cfg, cache, tokens, policy=policy, rng=rng,
+            compute_dtype=compute_dtype,
+        )
+
+    return decode_fn
+
+
+def greedy_generate(
+    params,
+    cfg: ArchConfig,
+    prompt_tokens,
+    n_steps: int,
+    *,
+    policy: MemPolicy | None = None,
+    max_len: int | None = None,
+    compute_dtype=jnp.bfloat16,
+    extra_batch: dict | None = None,
+):
+    """Batched greedy decoding driver (example / integration tests)."""
+    b, s = prompt_tokens.shape
+    ml = max_len or (s + n_steps + 1)
+    batch = {"tokens": prompt_tokens}
+    if extra_batch:
+        batch.update(extra_batch)
+    prefill = make_prefill_step(
+        cfg, policy, max_len=ml, compute_dtype=compute_dtype,
+        cache_dtype=jnp.float32 if compute_dtype == jnp.float32 else jnp.bfloat16,
+    )
+    decode = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
+    logits, cache = prefill(params, batch)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)
+    for _ in range(n_steps):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1)
+    out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,103 @@
+"""Training step: value_and_grad over the (mem-policy-aware) loss,
+optional gradient accumulation (microbatching), optional int8
+error-feedback gradient compression on the data-parallel all-reduce.
+
+The step is a pure function of (state, batch) so it jits with explicit
+in/out shardings for the production mesh.  Programming noise is re-drawn
+every step (weights are re-programmed after every update — paper §3.4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import MemPolicy
+from repro.models import loss_fn
+from repro.models.config import ArchConfig
+from repro.optim import Optimizer
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]
+
+TrainState = dict  # {"params", "opt", "step"}
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    policy: MemPolicy | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = True,
+    loss_chunk: int = 512,
+    microbatches: int = 1,
+    grad_compression=None,  # Optional[GradCompression]
+    seed: int = 0,
+):
+    policy = policy if policy is not None else MemPolicy(default=None)
+    base_rng = jax.random.PRNGKey(seed)
+
+    def lossf(params, mb, step):
+        rng = jax.random.fold_in(base_rng, step)
+        return loss_fn(
+            params, cfg, mb, policy=policy, rng=rng,
+            compute_dtype=compute_dtype, remat=remat, loss_chunk=loss_chunk,
+        )
+
+    def train_step(state: TrainState, batch: dict):
+        params, step = state["params"], state["step"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(lossf)(params, batch, step)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_fn(carry, mb):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(lossf)(params, mb, step)
+                grads_acc = jax.tree.map(jnp.add, grads_acc, g)
+                return (loss_acc + l, grads_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.float32(0), zeros), mbs
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        if grad_compression is not None:
+            grads, state = grad_compression.apply(grads, state)
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], params, step
+        )
+        new_state = dict(state)
+        new_state.update(
+            params=new_params, opt=new_opt, step=step + 1
+        )
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

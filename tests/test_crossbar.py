@@ -1,0 +1,64 @@
+"""Crossbar circuit model vs. the exact nodal oracle (paper Fig. 10)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crossbar import (
+    exact_node_voltages,
+    ideal_currents,
+    kcl_residual,
+    solve_crossbar,
+)
+
+
+@pytest.mark.parametrize("size", [8, 16, 32])
+def test_matches_exact_nodal_solve(size):
+    rng = np.random.default_rng(size)
+    g = rng.uniform(1e-7, 1e-5, (size, size))
+    v = 0.2 * (1 + np.sin(np.arange(size) / size * 6.28))
+    res = solve_crossbar(jnp.array(g), jnp.array(v), 2.93, 30)
+    _, _, i_exact = exact_node_voltages(g, v, 2.93)
+    rel = np.linalg.norm(np.array(res.i_out) - i_exact) / np.linalg.norm(
+        i_exact
+    )
+    assert rel < 1e-4, rel
+
+
+def test_ir_drop_attenuates_wordline():
+    """Fig. 10b: voltage decays along the word line; currents sag vs
+    the ideal dot product (Fig. 10c)."""
+    rng = np.random.default_rng(0)
+    size = 64
+    g = jnp.array(rng.uniform(5e-6, 1e-5, (size, size)), jnp.float32)
+    v = jnp.ones((size,), jnp.float32) * 0.2
+    res = solve_crossbar(g, v, 2.93, 30)
+    vw = np.array(res.vw)
+    # monotone-ish attenuation: end of word line < start
+    assert (vw[:, -1] < vw[:, 0]).all()
+    ideal = np.array(ideal_currents(g, v))
+    assert np.array(res.i_out).sum() < ideal.sum()
+
+
+def test_no_wire_resistance_limit():
+    """With negligible wire resistance the model reduces to G^T v."""
+    rng = np.random.default_rng(1)
+    g = jnp.array(rng.uniform(1e-7, 1e-5, (32, 32)), jnp.float32)
+    v = jnp.array(rng.uniform(0, 0.2, (32,)), jnp.float32)
+    res = solve_crossbar(g, v, 1e-6, 30)
+    ideal = np.array(ideal_currents(g, v))
+    rel = np.linalg.norm(np.array(res.i_out) - ideal) / np.linalg.norm(ideal)
+    assert rel < 1e-3, rel
+
+
+def test_convergence_1024_under_20_iters():
+    """Paper Fig. 10d: err < 1e-3 within 20 iterations at 1024x1024."""
+    rng = np.random.default_rng(2)
+    size = 1024
+    g = jnp.array(rng.uniform(1e-7, 1e-5, (size, size)), jnp.float32)
+    v = jnp.array(0.2 * (1 + np.sin(np.arange(size) / size * 6.28)), jnp.float32)
+    ref = solve_crossbar(g, v, 2.93, 200)
+    res = solve_crossbar(g, v, 2.93, 20)
+    rel = float(
+        jnp.linalg.norm(res.i_out - ref.i_out) / jnp.linalg.norm(ref.i_out)
+    )
+    assert rel < 1e-3, rel

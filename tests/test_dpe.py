@@ -1,0 +1,142 @@
+"""DPE engine behaviour: error ordering, mode agreement, noise stats."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DPEConfig, dpe_matmul, relative_error, spec
+from repro.core.dpe import fake_quant_input, fold_weight_noisy
+
+
+@pytest.fixture(scope="module")
+def xw():
+    x = jax.random.normal(jax.random.PRNGKey(0), (96, 160))
+    w = jax.random.normal(jax.random.PRNGKey(1), (160, 80))
+    return x, w
+
+
+def _re(y, x, w):
+    return float(relative_error(y, x @ w))
+
+
+def test_more_bits_lower_error(xw):
+    """Monotone precision ladder with ideal devices (paper Fig. 11)."""
+    x, w = xw
+    res = []
+    for name in ("int4", "int8", "int16"):
+        sp = spec(name)
+        cfg = DPEConfig(
+            input_spec=sp, weight_spec=sp, noise_mode="off", radc=0
+        )
+        res.append(_re(dpe_matmul(x, w, cfg), x, w))
+    assert res[0] > res[1] > res[2]
+
+
+def test_quantization_beats_prealignment(xw):
+    """Paper Fig. 12: INT (symmetric) < FP (pow2 pre-alignment) error at
+    equal effective bit width."""
+    x, w = xw
+    int8 = spec("int8")
+    fp8 = int8.with_kind("fp")
+    cfg_i = DPEConfig(input_spec=int8, weight_spec=int8, noise_mode="off", radc=0)
+    cfg_f = DPEConfig(input_spec=fp8, weight_spec=fp8, noise_mode="off", radc=0)
+    assert _re(dpe_matmul(x, w, cfg_i), x, w) < _re(
+        dpe_matmul(x, w, cfg_f), x, w
+    )
+
+
+def test_noise_raises_error_and_is_reproducible(xw):
+    x, w = xw
+    sp = spec("int8")
+    cfg0 = DPEConfig(input_spec=sp, weight_spec=sp, noise_mode="off")
+    cfg1 = DPEConfig(input_spec=sp, weight_spec=sp, var=0.05)
+    key = jax.random.PRNGKey(7)
+    re0 = _re(dpe_matmul(x, w, cfg0), x, w)
+    y1 = dpe_matmul(x, w, cfg1, key)
+    y2 = dpe_matmul(x, w, cfg1, key)
+    y3 = dpe_matmul(x, w, cfg1, jax.random.PRNGKey(8))
+    assert _re(y1, x, w) > re0
+    assert jnp.array_equal(y1, y2)  # same key -> same programming
+    assert not jnp.array_equal(y1, y3)
+
+
+def test_larger_block_higher_error(xw):
+    """Paper Fig. 12 / §3.3: block mapping bounds dynamic-range error."""
+    x, w = xw
+    res = []
+    for bs in (16, 64, 160):
+        cfg = DPEConfig(array_size=(bs, bs), noise_mode="off", radc=0)
+        res.append(_re(dpe_matmul(x, w, cfg), x, w))
+    assert res[0] < res[-1]
+
+
+def test_fast_equals_faithful_when_adc_ideal(xw):
+    x, w = xw
+    sp = spec("int8")
+    for noise in (False, True):
+        key = jax.random.PRNGKey(3)
+        cfgf = DPEConfig(
+            input_spec=sp, weight_spec=sp, radc=0,
+            noise_mode="program" if noise else "off",
+        )
+        y_faith = dpe_matmul(x, w, cfgf, key)
+        y_fast = dpe_matmul(x, w, cfgf.replace(mode="fast"), key)
+        assert jnp.allclose(y_faith, y_fast, atol=2e-4, rtol=1e-5), (
+            float(jnp.max(jnp.abs(y_faith - y_fast)))
+        )
+
+
+def test_adc_limits_precision(xw):
+    """A coarse ADC floors the achievable error (paper §4)."""
+    x, w = xw
+    sp = spec("fp32")
+    base = DPEConfig(input_spec=sp, weight_spec=sp, noise_mode="off")
+    res = {
+        radc: _re(dpe_matmul(x, w, base.replace(radc=radc)), x, w)
+        for radc in (0, 256, 4096)
+    }
+    assert res[0] < res[4096] < res[256]
+
+
+def test_fold_weight_matches_store_dtypes(xw):
+    _, w = xw
+    sp = spec("int8")
+    cfg = DPEConfig(input_spec=sp, weight_spec=sp, mode="fast",
+                    noise_mode="off")
+    w32 = fold_weight_noisy(w, cfg)
+    w16 = fold_weight_noisy(w, cfg.replace(store_dtype="bf16"))
+    assert w32.dtype == jnp.float32 and w16.dtype == jnp.bfloat16
+    rel = float(
+        jnp.linalg.norm(w32 - w16.astype(jnp.float32))
+        / jnp.linalg.norm(w32)
+    )
+    assert rel < 5e-3  # bf16 rounding well below programming noise
+
+
+def test_batched_input_shapes(xw):
+    x, w = xw
+    cfg = DPEConfig(noise_mode="off")
+    xb = x.reshape(4, 24, 160)
+    y = dpe_matmul(xb, w, cfg)
+    assert y.shape == (4, 24, 80)
+    y2 = dpe_matmul(x, w, cfg)
+    assert jnp.allclose(y, y2.reshape(4, 24, 80), atol=1e-5)
+
+
+def test_circuit_backend_adds_ir_drop(xw):
+    """Highest-fidelity path: slice-pair ops solved through the IR-drop
+    circuit model.  IR-drop error must match the crossbar-level current
+    loss scale (~4-5% at 64x64 / 2.93 ohm) on top of quantisation."""
+    import jax
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(6), (64, 64))
+    sp = spec("int8")
+    base = DPEConfig(input_spec=sp, weight_spec=sp, noise_mode="off", radc=0)
+    y_beh = dpe_matmul(x, w, base)
+    y_cir = dpe_matmul(x, w, base.replace(backend="circuit"))
+    re_beh = _re(y_beh, x, w)
+    re_cir = _re(y_cir, x, w)
+    assert re_cir > re_beh  # IR-drop strictly degrades
+    assert re_cir < 0.15  # but stays in the physical ballpark
+    drop = float(relative_error(y_cir, y_beh))
+    assert 0.005 < drop < 0.15, drop

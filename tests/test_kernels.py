@@ -1,0 +1,152 @@
+"""Pallas sliced-matmul kernel vs. pure-jnp oracle (interpret mode on CPU).
+
+Sweeps shapes, slice specs and ADC modes.  With ideal devices (noise off)
+the kernel must match the oracle exactly (all partials are integers, so
+ADC rounding has no boundary ambiguity); with programming noise on, the
+only admissible difference is ADC round-boundary flips, bounded by one
+ADC step times the largest significance product times the block scales.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DPEConfig, spec
+from repro.core.dpe import _faithful_matmul, prepare_input, prepare_weight
+from repro.kernels.ops import sliced_matmul
+from repro.kernels.ref import sliced_matmul_ref
+
+
+def _run(name, m, k, n, adc_mode, radc, noise, array=(64, 64), bm=64):
+    sp = spec(name)
+    cfg = DPEConfig(
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=array,
+        radc=radc,
+        adc_mode=adc_mode,
+        noise_mode="program" if noise else "off",
+    )
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    pw = prepare_weight(w, cfg, jax.random.PRNGKey(2) if noise else None)
+    xs, sx = prepare_input(x, cfg)
+    kw = dict(
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=array,
+        radc=radc,
+        adc_mode=adc_mode,
+    )
+    y_kernel = sliced_matmul(xs, sx, pw.slices, pw.scale, bm=bm, **kw)
+    pad = (-m) % bm
+    xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    sx_p = jnp.pad(sx, ((0, pad), (0, 0)))
+    y_ref = sliced_matmul_ref(xs_p, sx_p, pw.slices, pw.scale, bm=bm, **kw)[:m]
+    return y_kernel, y_ref, x, w, cfg
+
+
+SHAPES = [(64, 64, 64), (128, 256, 192), (200, 300, 250), (32, 512, 128)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("name", ["int4", "int8", "fp16", "bf16"])
+@pytest.mark.parametrize("adc_mode", ["dynamic", "fullscale"])
+def test_kernel_matches_ref_ideal(shape, name, adc_mode):
+    m, k, n = shape
+    y_kernel, y_ref, *_ = _run(name, m, k, n, adc_mode, 1024, noise=False)
+    assert jnp.isfinite(y_kernel).all()
+    # Integer partials make p/step land *exactly* on ADC .5 code
+    # boundaries (e.g. p=34, ymax=68 -> 511.5); XLA's reciprocal-multiply
+    # and the oracle's division then differ by 1 ulp and round apart.  A
+    # real ADC is +-1 LSB ambiguous at a code boundary, so we bound the
+    # disagreement by a norm tolerance instead of exactness.
+    rel = float(
+        jnp.linalg.norm(y_kernel - y_ref)
+        / jnp.maximum(jnp.linalg.norm(y_ref), 1e-30)
+    )
+    assert rel < 5e-3, rel
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("name", ["int4", "int8", "fp16"])
+def test_kernel_matches_ref_no_adc_exact(shape, name):
+    """Without the ADC nonlinearity there are no round boundaries: the
+    kernel must agree with the oracle to float-associativity ulps."""
+    m, k, n = shape
+    y_kernel, y_ref, *_ = _run(name, m, k, n, "dynamic", 0, noise=False)
+    assert jnp.allclose(y_kernel, y_ref, atol=5e-3, rtol=1e-5), (
+        float(jnp.max(jnp.abs(y_kernel - y_ref)))
+    )
+
+
+@pytest.mark.parametrize("name", ["int8", "fp16"])
+def test_kernel_matches_ref_noisy(name):
+    m, k, n = 128, 256, 192
+    y_kernel, y_ref, x, w, cfg = _run(name, m, k, n, "dynamic", 1024, True)
+    # agreement up to ADC round-boundary flips
+    diff = jnp.abs(y_kernel - y_ref)
+    rel = float(jnp.linalg.norm(y_kernel - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 5e-3, rel
+
+
+@pytest.mark.parametrize("radc", [0, 256, 1024])
+def test_kernel_matches_behavioral_fullscale(radc):
+    """With static ADC range the kernel, the oracle and the behavioural
+    engine path all share identical semantics."""
+    sp = spec("int8")
+    cfg = DPEConfig(
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=radc,
+        adc_mode="fullscale",
+        noise_mode="off",
+    )
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 128), jnp.float32)
+    pw = prepare_weight(w, cfg, None)
+    xs, sx = prepare_input(x, cfg)
+    y_kernel = sliced_matmul(
+        xs,
+        sx,
+        pw.slices,
+        pw.scale,
+        bm=64,
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=radc,
+        adc_mode="fullscale",
+    )
+    y_beh = _faithful_matmul(xs, sx, pw.slices, pw.scale, cfg)
+    assert jnp.allclose(y_kernel, y_beh, atol=1e-4, rtol=1e-5)
+
+
+def test_kernel_approaches_ideal_matmul():
+    """With many bits, no noise and no ADC the DPE is a plain matmul."""
+    sp = spec("fp32")
+    cfg = DPEConfig(
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=0,
+        noise_mode="off",
+    )
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(6), (128, 64), jnp.float32)
+    pw = prepare_weight(w, cfg, None)
+    xs, sx = prepare_input(x, cfg)
+    y = sliced_matmul(
+        xs,
+        sx,
+        pw.slices,
+        pw.scale,
+        bm=64,
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=0,
+        adc_mode="dynamic",
+    )
+    rel = jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w)
+    assert rel < 1e-4, float(rel)

@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) for the bit-slicing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DPEConfig,
+    PRESETS,
+    SliceSpec,
+    slice_int,
+    slice_significances,
+    spec,
+    unslice,
+)
+from repro.core.quant import block_scale, quantize
+
+SPEC_NAMES = sorted(PRESETS)
+
+
+@st.composite
+def slice_specs(draw):
+    n = draw(st.integers(2, 5))
+    bits = [1] + [draw(st.sampled_from([1, 2, 4])) for _ in range(n - 1)]
+    kind = draw(st.sampled_from(["int", "fp"]))
+    return SliceSpec(kind, tuple(bits))
+
+
+@given(slice_specs(), st.integers(0, 2**31 - 1))
+@settings(max_examples=80, deadline=None)
+def test_slice_unslice_roundtrip(sp, seed):
+    """unslice(slice(x)) == x for every representable integer."""
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(sp.qmin, sp.qmax + 1, size=(32,), dtype=np.int64)
+    xq = jnp.asarray(xq, jnp.int32)
+    rec = unslice(slice_int(xq, sp), sp)
+    assert jnp.array_equal(rec.astype(jnp.int32), xq)
+
+
+@given(slice_specs())
+@settings(max_examples=40, deadline=None)
+def test_slice_values_unsigned_in_range(sp):
+    xq = jnp.arange(sp.qmin, sp.qmax + 1, dtype=jnp.int32)
+    s = slice_int(xq, sp)
+    for k, width in enumerate(sp.bits):
+        assert int(s[k].min()) >= 0
+        assert int(s[k].max()) <= 2**width - 1
+
+
+@given(slice_specs())
+@settings(max_examples=30, deadline=None)
+def test_significances_cover_range(sp):
+    sig = slice_significances(sp)
+    # max reachable = qmax, min = qmin
+    hi = sum(
+        (2**b - 1) * s for b, s in zip(sp.bits, sig) if s > 0
+    )
+    lo = sum(
+        (2**b - 1) * s for b, s in zip(sp.bits, sig) if s < 0
+    )
+    assert hi == sp.qmax
+    assert lo == (sp.qmin if sp.signed else 0)
+
+
+@given(
+    st.sampled_from(SPEC_NAMES),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_bounded_error(name, seed):
+    """|dequant(quant(x)) - x| <= scale/2 within the representable range."""
+    sp = spec(name)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    scale = block_scale(jnp.max(jnp.abs(x)), sp)
+    q = quantize(x, scale, sp)
+    err = jnp.abs(q * scale - x)
+    assert float(jnp.max(err)) <= float(scale) * 0.5 + 1e-7
+
+
+@pytest.mark.parametrize("name", SPEC_NAMES)
+def test_preset_specs_valid(name):
+    sp = spec(name)
+    assert sp.total_bits == sum(sp.bits)
+    assert sp.bits[0] == 1  # signed sign slice
+    # paper's stated slicings
+    if name == "int4":
+        assert sp.bits == (1, 1, 2)
+    if name == "int8":
+        assert sp.bits == (1, 1, 2, 4)
+    if name == "fp16":
+        assert sp.bits == (1, 1, 2, 4, 4)
+
+
+def test_dpe_config_validates():
+    with pytest.raises(ValueError):
+        DPEConfig(g_levels=8, weight_spec=spec("int8"))  # 4b slice > 8 lvls
+    with pytest.raises(ValueError):
+        DPEConfig(mode="nope")
+    with pytest.raises(ValueError):
+        SliceSpec("int", (2, 1))  # signed without sign slice
