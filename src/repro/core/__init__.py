@@ -19,6 +19,7 @@ from .dpe import (
     prepare_input,
     dpe_matmul,
     dpe_matmul_prepared,
+    resolve_backend,
     relative_error,
 )
 

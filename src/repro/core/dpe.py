@@ -16,6 +16,17 @@ The pipeline for ``y ≈ x @ w`` (Fig. 5 / Fig. 6 / Fig. 7):
 Three modes (DESIGN.md §4): ``faithful`` (paper semantics), ``fast``
 (beyond-paper digital slice folding — exact when the ADC is ideal), and
 ``digital`` (software baseline).
+
+Engine schedule (vectorized, PR 1): the faithful path computes every
+(input-slice x weight-slice) pair of a K-block in ONE batched GEMM over
+the stacked pair axis, applies the per-pair ADC to the whole
+(Sx, M, Sw, nn, bn) partial stack in a single fused quantize+recombine
+pass, and takes an exact folded single-GEMM shortcut when the ADC is
+ideal.  The seed slice-pair loop survives as
+:func:`_faithful_matmul_loop` — the equivalence oracle
+(tests/test_exactness.py) and the perf baseline ``benchmarks/run.py
+--json`` tracks speedups against.  Backend selection (xla / pallas /
+circuit / auto) is resolved by :func:`resolve_backend`.
 """
 from __future__ import annotations
 
@@ -36,6 +47,7 @@ __all__ = [
     "prepare_input",
     "dpe_matmul",
     "dpe_matmul_prepared",
+    "resolve_backend",
     "relative_error",
 ]
 
@@ -131,6 +143,25 @@ def _adc_fullscale(cfg: DPEConfig, bx: int, bw: int) -> float:
     return float(bk) * (2.0**bx - 1.0) * (2.0**bw - 1.0)
 
 
+def _pair_fullscale(cfg: DPEConfig) -> jax.Array:
+    """Static per-pair ADC full-scale, shape (Sx, 1, Sw, 1, 1)."""
+    fs = [
+        [_adc_fullscale(cfg, bx, bw) for bw in cfg.weight_spec.bits]
+        for bx in cfg.input_spec.bits
+    ]
+    sxn = cfg.input_spec.n_slices
+    swn = cfg.weight_spec.n_slices
+    return jnp.asarray(fs, jnp.float32).reshape(sxn, 1, swn, 1, 1)
+
+
+def _pair_significances(cfg: DPEConfig) -> jax.Array:
+    """Recombination weight of each (input-slice, weight-slice) pair —
+    shape (Sx, Sw)."""
+    sigx = slice_significances(cfg.input_spec)
+    sigw = slice_significances(cfg.weight_spec)
+    return jnp.asarray(sigx[:, None] * sigw[None, :], jnp.float32)
+
+
 def _faithful_matmul(
     xs: jax.Array,
     sx: jax.Array,
@@ -140,8 +171,80 @@ def _faithful_matmul(
 ) -> jax.Array:
     """Per slice-pair, per K-block analog matmul with ADC (paper path).
 
+    Vectorized engine: all Sx*Sw slice pairs of one K-block are computed
+    by a single batched contraction — one (Sx·M, bk) x (bk, Sw·Np) GEMM
+    on the MXU/AVX units instead of Sx*Sw small launches — the per-pair
+    ADC quantisation is applied to the stacked (Sx, M, Sw, nn, bn)
+    partial-sum tensor in one vectorized pass (one fused max reduction
+    instead of Sx*Sw separate ones), and the digital recombination is one
+    contraction against the (Sx, Sw) pair-significance table.  ADC
+    arithmetic goes through the same :func:`repro.core.quant.adc_quantize`
+    expression as the seed slice-pair loop (kept verbatim as
+    :func:`_faithful_matmul_loop`), so outputs agree to float-reassociation
+    ulps (<=1e-5 rel; see tests/test_exactness.py).
+
+    When the ADC is ideal (``radc <= 1``) the per-pair partial sums are
+    never observed individually — recombination is linear — so the whole
+    computation collapses exactly to the digitally-folded single GEMM of
+    :func:`_fast_matmul` (DESIGN.md §4).  We take that shortcut: it is the
+    same math at ~Sx*Sw times less compute.
+
     xs: (Sx, M, Kp); sx: (M, nk); ws: (Sw, Kp, Np); sw: (nk, nn).
     Returns (M, Np) float32.
+    """
+    if cfg.radc <= 1:
+        return _fast_matmul(xs, sx, ws, sw, cfg)
+    bk, bn = cfg.array_size
+    sxn, m, kp = xs.shape
+    swn, _, np_ = ws.shape
+    nk, nn = kp // bk, np_ // bn
+    sig_pair = _pair_significances(cfg)[:, None, :, None, None]
+    ymax_fs = _pair_fullscale(cfg)
+    xsb = xs.reshape(sxn, m, nk, bk)
+    wsb = ws.reshape(swn, nk, bk, np_)
+
+    acc = jnp.zeros((m, np_), jnp.float32)
+    # The K-block walk is a static Python loop (nk small): each iteration
+    # is one fused GEMM + one reduction + one quantize-recombine pass,
+    # and the (Sx, M, Sw, nn, bn) partial stack stays cache-resident.
+    for kb in range(nk):
+        # One batched GEMM over the stacked slice-pair axis, in the
+        # transpose-free dot_general layout (Sx, M, Sw, Np).
+        p = lax.dot_general(
+            xsb[:, :, kb], wsb[:, kb], (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(sxn, m, swn, nn, bn)
+        if cfg.adc_mode == "dynamic":
+            # per-pair, per-n-block dynamic range (max over the rows and
+            # bit-lines of one crossbar) — same as the seed loop, but one
+            # vectorized two-stage reduction (innermost bit-line axis
+            # first, so both stages stream contiguously).
+            ymax = jnp.max(
+                jnp.max(p, axis=4, keepdims=True), axis=1, keepdims=True
+            )
+        else:
+            ymax = ymax_fs
+        # adc_quantize (round(p/step)*step) with the *step and the pair
+        # significance folded into one coefficient so the quantize and
+        # the recombination reduce in a single pass over the stack.
+        step = jnp.maximum(ymax, 1e-30) / (cfg.radc - 1)
+        out = jnp.sum((sig_pair * step) * jnp.round(p / step), axis=(0, 2))
+        out = out * sx[:, kb][:, None, None] * sw[kb][None, :, None]
+        acc = acc + out.reshape(m, np_)
+    return acc
+
+
+def _faithful_matmul_loop(
+    xs: jax.Array,
+    sx: jax.Array,
+    ws: jax.Array,
+    sw: jax.Array,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Seed (pre-vectorization) slice-pair loop — kept verbatim as the
+    equivalence oracle for :func:`_faithful_matmul` and as the perf
+    baseline that ``benchmarks/run.py --json`` reports speedups against.
+    Do not optimise this function.
     """
     bk, bn = cfg.array_size
     sxn, m, kp = xs.shape
@@ -296,46 +399,68 @@ def _circuit_matmul(
     sigx = slice_significances(cfg.input_spec)
     sigw = slice_significances(cfg.weight_spec)
     v_read = 0.2  # word-line read voltage full-scale
+    # (nk, m, np_) broadcastable per-K-block scale: rows carry sx, columns
+    # carry sw repeated over each physical tile's bit-lines.
+    kb_scale = (
+        sx.T[:, :, None]
+        * jnp.repeat(sw, bn, axis=1)[:, None, :]
+    )  # (nk, M, Np)
     out = jnp.zeros((m, np_), jnp.float32)
     for i in range(sxn):
         vmax_x = 2.0 ** cfg.input_spec.bits[i] - 1.0
+        # all K-blocks at once: (nk, M, bk) word-line voltages
+        vin = xs[i].reshape(m, nk, bk).transpose(1, 0, 2) / vmax_x * v_read
         for j in range(swn):
             bits_w = cfg.weight_spec.bits[j]
             dg = (cfg.hgs - cfg.lgs) / (2.0**bits_w - 1.0)
-            pair = jnp.zeros((m, np_), jnp.float32)
-            for kb in range(nk):
-                # one physical (bk x bn) tile per n-block: word-line
-                # IR-drop must not span across separate arrays
-                g_tiles = slice_to_conductance(
-                    ws[j, kb * bk : (kb + 1) * bk, :]
-                    .reshape(bk, nn, bn)
-                    .transpose(1, 0, 2),
-                    bits_w, cfg.hgs, cfg.lgs,
-                )  # (nn, bk, bn)
-                vin = (
-                    xs[i, :, kb * bk : (kb + 1) * bk] / vmax_x * v_read
-                )  # (M, bk)
+            # one physical (bk x bn) tile per (k-block, n-block): word-line
+            # IR-drop must not span across separate arrays.
+            g_tiles = slice_to_conductance(
+                ws[j]
+                .reshape(nk, bk, nn, bn)
+                .transpose(0, 2, 1, 3),
+                bits_w, cfg.hgs, cfg.lgs,
+            )  # (nk, nn, bk, bn)
 
-                def solve_tile(g1):
-                    return jax.vmap(
-                        lambda v: solve_crossbar(g1, v, 2.93, 20).i_out
-                    )(vin)  # (M, bn)
+            def solve_tile(g1, v1):
+                return jax.vmap(
+                    lambda v: solve_crossbar(g1, v, 2.93, 20).i_out
+                )(v1)  # (M, bn)
 
-                res = jax.vmap(solve_tile)(g_tiles)  # (nn, M, bn)
-                y = res.transpose(1, 0, 2).reshape(m, np_) / v_read * vmax_x
-                # invert the conductance offset: I = V·(LGS + v_w·dg)
-                y = (
-                    y
-                    - jnp.sum(
-                        vin / v_read * vmax_x, axis=1, keepdims=True
-                    ) * cfg.lgs
-                ) / dg
-                kb_scale = sx[:, kb : kb + 1] * jnp.repeat(
-                    sw[kb], bn
-                )[None, :]
-                pair = pair + y * kb_scale
+            # de-looped per-K-block dispatch: vmap over k-blocks, then over
+            # the n-block tiles sharing that k-block's word-line drive.
+            res = jax.vmap(
+                lambda gk, vk: jax.vmap(lambda g1: solve_tile(g1, vk))(gk)
+            )(g_tiles, vin)  # (nk, nn, M, bn)
+            y = (
+                res.transpose(0, 2, 1, 3).reshape(nk, m, np_)
+                / v_read * vmax_x
+            )
+            # invert the conductance offset: I = V·(LGS + v_w·dg)
+            col_sum = jnp.sum(
+                vin / v_read * vmax_x, axis=2, keepdims=True
+            )  # (nk, M, 1)
+            y = (y - col_sum * cfg.lgs) / dg
+            pair = jnp.sum(y * kb_scale, axis=0)
             out = out + float(sigx[i] * sigw[j]) * pair
     return out
+
+
+def resolve_backend(cfg: DPEConfig) -> str:
+    """Concrete backend for ``cfg`` (resolves ``"auto"``).
+
+    Auto-selection rule: the fused Pallas kernel wins only where it
+    compiles to real TPU hardware; everywhere else (CPU/GPU) it would run
+    in interpret mode — orders of magnitude slower than the vectorized
+    XLA engine — so ``auto`` picks ``pallas`` iff
+    ``jax.default_backend() == "tpu"`` and the mode is ``faithful``
+    (fast/digital modes never touch the slice-pair kernel).
+    """
+    if cfg.backend != "auto":
+        return cfg.backend
+    if cfg.mode == "faithful" and jax.default_backend() == "tpu":
+        return "pallas"
+    return "xla"
 
 
 def dpe_matmul_prepared(
@@ -349,9 +474,10 @@ def dpe_matmul_prepared(
     k = x.shape[-1]
     xm = x.reshape(-1, k)
     xs, sx = prepare_input(xm, cfg)
-    if cfg.backend == "circuit":
+    backend = resolve_backend(cfg)
+    if backend == "circuit":
         y = _circuit_matmul(xs, sx, pw.slices, pw.scale, cfg)
-    elif cfg.backend == "pallas" and cfg.mode == "faithful":
+    elif backend == "pallas" and cfg.mode == "faithful":
         from repro.kernels import ops as _kops
 
         y = _kops.sliced_matmul(

@@ -51,7 +51,11 @@ class DPEConfig:
     # "xla": pure-jnp lowering; "pallas": fused TPU kernel for the
     #        faithful slice-pair loop; "circuit": every slice-pair op
     #        solved through the IR-drop crossbar circuit model (highest
-    #        fidelity, paper Fig. 4 — small operators only).
+    #        fidelity, paper Fig. 4 — small operators only);
+    # "auto": pallas iff jax.default_backend() == "tpu" and the mode is
+    #        faithful, else xla (see repro.core.dpe.resolve_backend —
+    #        interpret-mode pallas on CPU/GPU would be far slower than
+    #        the vectorized XLA engine).
     backend: str = "xla"
     # dtype for folded/effective weights in fast mode ("f32" | "bf16").
     # bf16 rounding (<=0.4% rel) is far below the 5% programming noise.
@@ -64,7 +68,7 @@ class DPEConfig:
             raise ValueError(f"bad adc_mode {self.adc_mode!r}")
         if self.noise_mode not in ("program", "off"):
             raise ValueError(f"bad noise_mode {self.noise_mode!r}")
-        if self.backend not in ("xla", "pallas", "circuit"):
+        if self.backend not in ("xla", "pallas", "circuit", "auto"):
             raise ValueError(f"bad backend {self.backend!r}")
         if self.store_dtype not in ("f32", "bf16"):
             raise ValueError(f"bad store_dtype {self.store_dtype!r}")

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .sharding import pvary, shard_map
+
 __all__ = ["pipeline_apply"]
 
 
@@ -65,8 +67,8 @@ def pipeline_apply(
 
         # mark the carries as device-varying over the stage axis (VMA
         # typing: they become varying after the first ppermute)
-        buf0 = jax.lax.pvary(jnp.zeros_like(xs[0]), (axis,))
-        outs0 = jax.lax.pvary(
+        buf0 = pvary(jnp.zeros_like(xs[0]), (axis,))
+        outs0 = pvary(
             jnp.zeros((m,) + xs.shape[1:], xs.dtype), (axis,)
         )
         (_, outs), _ = lax.scan(tick, (buf0, outs0), jnp.arange(n_ticks))
@@ -78,7 +80,7 @@ def pipeline_apply(
         )
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -27,7 +27,22 @@ __all__ = [
     "constrain",
     "logical_sharding",
     "param_sharding_rules",
+    "shard_map",
+    "pvary",
 ]
+
+# --- JAX-version compat -----------------------------------------------------
+# ``jax.shard_map`` was promoted out of jax.experimental after 0.4.x, and
+# ``jax.lax.pvary`` (varying-manual-axes typing for shard_map carries) only
+# exists on newer releases where shard_map enforces VMA typing.  On older
+# versions the collectives accept replicated carries directly, so pvary can
+# degrade to the identity.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 # logical axis -> mesh axis (or tuple of mesh axes)
 LOGICAL_RULES: dict[str, object] = {

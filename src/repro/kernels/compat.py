@@ -1,0 +1,26 @@
+"""JAX-version compatibility shims for the Pallas TPU kernels.
+
+The TPU compiler-params container was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (0.4.x) became ``pltpu.CompilerParams``
+(>= 0.6).  Both take the same ``dimension_semantics`` field; this module
+resolves whichever exists at import time so the kernels run on the full
+range of JAX versions the container fleet carries.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Version-portable ``compiler_params=`` value for ``pl.pallas_call``."""
+    if _PARAMS_CLS is None:  # ancient pallas: dict form
+        return dict(
+            mosaic=dict(dimension_semantics=dimension_semantics)
+        )
+    return _PARAMS_CLS(dimension_semantics=dimension_semantics)

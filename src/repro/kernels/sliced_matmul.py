@@ -35,9 +35,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.slicing import SliceSpec, slice_significances
+
+from .compat import tpu_compiler_params
 
 __all__ = ["sliced_matmul_pallas"]
 
@@ -153,8 +154,8 @@ def sliced_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(xs, sx, ws, sw)

@@ -66,6 +66,9 @@ def make_policy(mode: str) -> MemPolicy:
         array_size=(128, 128),  # MXU-aligned simulated tile (DESIGN.md §3)
         mode=dpe_mode,
         store_dtype="bf16",
+        # faithful serving picks the fused Pallas kernel on real TPUs and
+        # the vectorized XLA engine everywhere else (dpe.resolve_backend)
+        backend="auto",
     )
     # embedding gather and router stay digital; everything else on the DPE
     return MemPolicy(default=cfg, overrides=(("router", None),))

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # minutes-long sweep over all arch families
+
 from repro.configs import all_arch_names, get, get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy

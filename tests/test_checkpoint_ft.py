@@ -138,10 +138,10 @@ def test_quant_dequant_bounded():
 
 def test_compressed_psum_single_device():
     from jax.sharding import Mesh
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.compression import compressed_psum
+    from repro.distributed.sharding import shard_map
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(2), (64,))

@@ -14,6 +14,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 8-device subprocess train/decode/restore
+
 _SCRIPT = textwrap.dedent(
     """
     import os

@@ -4,7 +4,11 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import DPEConfig, dpe_matmul, relative_error, spec
-from repro.core.dpe import fake_quant_input, fold_weight_noisy
+from repro.core.dpe import (
+    fake_quant_input,
+    fold_weight_noisy,
+    resolve_backend,
+)
 
 
 @pytest.fixture(scope="module")
@@ -120,6 +124,26 @@ def test_batched_input_shapes(xw):
     assert y.shape == (4, 24, 80)
     y2 = dpe_matmul(x, w, cfg)
     assert jnp.allclose(y, y2.reshape(4, 24, 80), atol=1e-5)
+
+
+def test_backend_auto_selection(xw):
+    """auto -> pallas only on real TPU hosts + faithful mode; explicit
+    backends resolve to themselves; auto matmul runs and matches xla."""
+    x, w = xw
+    sp = spec("int8")
+    cfg = DPEConfig(input_spec=sp, weight_spec=sp, backend="auto",
+                    noise_mode="off")
+    expected = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert resolve_backend(cfg) == expected
+    assert resolve_backend(cfg.replace(mode="fast")) == "xla"
+    for explicit in ("xla", "pallas", "circuit"):
+        assert resolve_backend(cfg.replace(backend=explicit)) == explicit
+    y_auto = dpe_matmul(x, w, cfg)
+    y_xla = dpe_matmul(x, w, cfg.replace(backend="xla"))
+    if expected == "xla":
+        assert jnp.array_equal(y_auto, y_xla)
+    else:
+        assert jnp.allclose(y_auto, y_xla, atol=1e-3, rtol=1e-4)
 
 
 def test_circuit_backend_adds_ir_drop(xw):

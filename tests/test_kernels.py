@@ -79,13 +79,52 @@ def test_kernel_matches_ref_no_adc_exact(shape, name):
     )
 
 
+@pytest.mark.parametrize("adc_mode", ["dynamic", "fullscale"])
 @pytest.mark.parametrize("name", ["int8", "fp16"])
-def test_kernel_matches_ref_noisy(name):
+def test_kernel_matches_ref_noisy(name, adc_mode):
     m, k, n = 128, 256, 192
-    y_kernel, y_ref, x, w, cfg = _run(name, m, k, n, "dynamic", 1024, True)
+    y_kernel, y_ref, x, w, cfg = _run(name, m, k, n, adc_mode, 1024, True)
     # agreement up to ADC round-boundary flips
     diff = jnp.abs(y_kernel - y_ref)
     rel = float(jnp.linalg.norm(y_kernel - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 5e-3, rel
+
+
+@pytest.mark.parametrize("radc", [256, 1024])
+def test_kernel_matches_behavioral_fullscale_noisy(radc):
+    """Noisy weights + static ADC range: kernel vs the vectorized
+    behavioural engine (continuous partials -> no .5-boundary ambiguity
+    in the dynamic sense, but fullscale constant-step rounding can still
+    flip codes; bound by one step)."""
+    sp = spec("int8")
+    cfg = DPEConfig(
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=radc,
+        adc_mode="fullscale",
+        noise_mode="program",
+    )
+    x = jax.random.normal(jax.random.PRNGKey(8), (128, 192), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(9), (192, 128), jnp.float32)
+    pw = prepare_weight(w, cfg, jax.random.PRNGKey(10))
+    xs, sx = prepare_input(x, cfg)
+    y_kernel = sliced_matmul(
+        xs,
+        sx,
+        pw.slices,
+        pw.scale,
+        bm=64,
+        input_spec=sp,
+        weight_spec=sp,
+        array_size=(64, 64),
+        radc=radc,
+        adc_mode="fullscale",
+    )
+    y_beh = _faithful_matmul(xs, sx, pw.slices, pw.scale, cfg)
+    rel = float(
+        jnp.linalg.norm(y_kernel - y_beh) / jnp.linalg.norm(y_beh)
+    )
     assert rel < 5e-3, rel
 
 

@@ -1,9 +1,21 @@
-"""Property-based tests (hypothesis) for the bit-slicing invariants."""
+"""Property-based tests for the bit-slicing invariants.
+
+When ``hypothesis`` is installed the properties are checked over randomly
+drawn slice specs; otherwise each property runs over a small deterministic
+grid of representative specs (all preset slicings plus hand-picked odd
+ones), so tier-1 collection never depends on an optional package.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback grid below
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     DPEConfig,
@@ -18,17 +30,57 @@ from repro.core.quant import block_scale, quantize
 
 SPEC_NAMES = sorted(PRESETS)
 
+# Deterministic fallback: every preset slicing in both kinds, plus odd
+# widths/orders hypothesis would likely explore.
+FALLBACK_SPECS = [
+    *(SliceSpec(kind, spec(n).bits) for n in SPEC_NAMES for kind in ("int", "fp")),
+    SliceSpec("int", (1, 1)),
+    SliceSpec("int", (1, 4, 1, 2)),
+    SliceSpec("fp", (1, 2, 2, 1, 4)),
+    SliceSpec("fp", (1, 1, 1, 1, 1)),
+]
+FALLBACK_SEEDS = [0, 1, 12345, 2**31 - 1]
 
-@st.composite
-def slice_specs(draw):
-    n = draw(st.integers(2, 5))
-    bits = [1] + [draw(st.sampled_from([1, 2, 4])) for _ in range(n - 1)]
-    kind = draw(st.sampled_from(["int", "fp"]))
-    return SliceSpec(kind, tuple(bits))
+
+def _spec_id(sp):
+    return f"{sp.kind}{''.join(map(str, sp.bits))}"
 
 
-@given(slice_specs(), st.integers(0, 2**31 - 1))
-@settings(max_examples=80, deadline=None)
+def grid_or_given(*needs_seed):
+    """Decorator: hypothesis ``@given`` when available, else a
+    deterministic ``parametrize`` grid over (spec[, seed])."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            if needs_seed:
+                return settings(max_examples=60, deadline=None)(
+                    given(_hyp_specs(), st.integers(0, 2**31 - 1))(fn)
+                )
+            return settings(max_examples=40, deadline=None)(
+                given(_hyp_specs())(fn)
+            )
+        if needs_seed:
+            return pytest.mark.parametrize("seed", FALLBACK_SEEDS)(
+                pytest.mark.parametrize(
+                    "sp", FALLBACK_SPECS, ids=_spec_id
+                )(fn)
+            )
+        return pytest.mark.parametrize("sp", FALLBACK_SPECS, ids=_spec_id)(fn)
+
+    return deco
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _hyp_specs(draw):
+        n = draw(st.integers(2, 5))
+        bits = [1] + [draw(st.sampled_from([1, 2, 4])) for _ in range(n - 1)]
+        kind = draw(st.sampled_from(["int", "fp"]))
+        return SliceSpec(kind, tuple(bits))
+
+
+@grid_or_given("seed")
 def test_slice_unslice_roundtrip(sp, seed):
     """unslice(slice(x)) == x for every representable integer."""
     rng = np.random.default_rng(seed)
@@ -38,8 +90,7 @@ def test_slice_unslice_roundtrip(sp, seed):
     assert jnp.array_equal(rec.astype(jnp.int32), xq)
 
 
-@given(slice_specs())
-@settings(max_examples=40, deadline=None)
+@grid_or_given()
 def test_slice_values_unsigned_in_range(sp):
     xq = jnp.arange(sp.qmin, sp.qmax + 1, dtype=jnp.int32)
     s = slice_int(xq, sp)
@@ -48,8 +99,7 @@ def test_slice_values_unsigned_in_range(sp):
         assert int(s[k].max()) <= 2**width - 1
 
 
-@given(slice_specs())
-@settings(max_examples=30, deadline=None)
+@grid_or_given()
 def test_significances_cover_range(sp):
     sig = slice_significances(sp)
     # max reachable = qmax, min = qmin
@@ -63,12 +113,25 @@ def test_significances_cover_range(sp):
     assert lo == (sp.qmin if sp.signed else 0)
 
 
-@given(
-    st.sampled_from(SPEC_NAMES),
-    st.integers(0, 2**31 - 1),
-)
-@settings(max_examples=30, deadline=None)
-def test_quantize_bounded_error(name, seed):
+if HAVE_HYPOTHESIS:
+
+    @given(
+        st.sampled_from(SPEC_NAMES),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_quantize_bounded_error(name, seed):
+        _check_quantize_bounded_error(name, seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    @pytest.mark.parametrize("name", SPEC_NAMES)
+    def test_quantize_bounded_error(name, seed):
+        _check_quantize_bounded_error(name, seed)
+
+
+def _check_quantize_bounded_error(name, seed):
     """|dequant(quant(x)) - x| <= scale/2 within the representable range."""
     sp = spec(name)
     x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
