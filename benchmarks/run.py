@@ -9,8 +9,10 @@ figure's headline quantity (relative error, accuracy, iterations, ...).
 benchmark and writes ``BENCH_dpe.json`` (schema in benchmarks/README.md):
 µs/call and relative error for every engine path — vectorized faithful,
 seed-loop faithful, fast, pallas(interpret) — at the paper's Table 2
-defaults, (M,K,N) = (128,1024,1024) INT8.  Every future PR has a perf
-trajectory to beat; CI runs it on every push.
+defaults, (M,K,N) = (128,1024,1024) INT8, plus a ``serve_decode``
+section (decode tokens/s on a memristive smoke LM, programmed-once vs
+per-call re-programming).  Every future PR has a perf trajectory to
+beat; CI runs it on every push.
 """
 from __future__ import annotations
 
@@ -234,7 +236,7 @@ def _timed_min(fn, *args, repeats=5):
     return out, best * 1e6
 
 
-def bench_dpe_trajectory(quick=False, json_path=None):
+def bench_dpe_trajectory(quick=False):
     """Perf-regression trajectory for the DPE hot path (BENCH_dpe.json).
 
     Paper Table 2 defaults — INT8 slices, (64,64) arrays, 10-bit dynamic
@@ -343,11 +345,68 @@ def bench_dpe_trajectory(quick=False, json_path=None):
             "faithful_seed_loop_radc0", "faithful_vectorized_radc0"
         ),
     }
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"# wrote {json_path}", file=sys.stderr)
     return report
+
+
+def bench_serve_decode(quick=False, arch="qwen2-0.5b", policy_name="mem_faithful"):
+    """Weight-stationary serving (DESIGN.md §5): decode tokens/s with the
+    model programmed once vs the legacy inline re-programming path, on a
+    memristive smoke model.  Returns the ``serve_decode`` section of
+    ``BENCH_dpe.json``."""
+    from repro.configs import get_smoke
+    from repro.launch.dryrun import make_policy
+    from repro.models import init_params, program_params, programmed_byte_size
+    from repro.serve import make_decode_step, make_prefill_step
+
+    cfg = get_smoke(arch)
+    policy = make_policy(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, p, n = (2, 8, 4) if quick else (4, 16, 16)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, policy, max_len=p + n + 1))
+    decode = jax.jit(make_decode_step(cfg, policy))
+
+    def decode_tps(prog):
+        logits, cache = prefill(params, {"tokens": toks}, prog)
+        tok = jnp.argmax(logits, -1)
+        logits, cache = decode(params, cache, tok, prog)  # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            logits, cache = decode(params, cache, tok, prog)
+            tok = jnp.argmax(logits, -1)
+        jax.block_until_ready(logits)
+        return b * n / (time.perf_counter() - t0)
+
+    tps_per_call = decode_tps(None)
+    t0 = time.perf_counter()
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(prog))
+    t_program = time.perf_counter() - t0
+    tps_programmed = decode_tps(prog)
+    section = {
+        "arch": f"{arch} (smoke)",
+        "policy": policy_name,
+        "batch": b,
+        "prompt_len": p,
+        "gen_steps": n,
+        "decode_tokens_per_s": {
+            "programmed": round(tps_programmed, 1),
+            "per_call": round(tps_per_call, 1),
+        },
+        "speedup_programmed_vs_per_call": round(
+            tps_programmed / tps_per_call, 2
+        ),
+        "program_once_s": round(t_program, 2),
+        "programmed_mbytes": round(programmed_byte_size(prog) / 1e6, 2),
+    }
+    _row("serve_decode_programmed", 0.0, f"tok_s={tps_programmed:.1f}")
+    _row("serve_decode_per_call", 0.0, f"tok_s={tps_per_call:.1f}")
+    _row(
+        "serve_decode_speedup", 0.0,
+        f"{section['speedup_programmed_vs_per_call']}x",
+    )
+    return section
 
 
 ALL = [
@@ -382,7 +441,15 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.json:
-        bench_dpe_trajectory(quick=args.quick, json_path=args.json)
+        report = bench_dpe_trajectory(quick=args.quick)
+        try:
+            report["serve_decode"] = bench_serve_decode(quick=args.quick)
+        except Exception as e:  # keep the trajectory going
+            _row("serve_decode", -1, f"ERROR:{type(e).__name__}:{e}")
+            report["serve_decode"] = {"error": str(e)}
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
         if not args.all:
             return
     for fn in ALL:

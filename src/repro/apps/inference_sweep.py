@@ -11,7 +11,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DPEConfig, SliceSpec
-from repro.apps.train_mlp import forward, init_net, run as _train_run, synth_digits
+from repro.apps.train_mlp import (
+    forward,
+    init_net,
+    program_net,
+    run as _train_run,
+    synth_digits,
+)
 
 
 def _train_full_precision(steps=120, batch=64, lr=0.05):
@@ -37,9 +43,17 @@ def _train_full_precision(steps=120, batch=64, lr=0.05):
     return params, x_test, y_test
 
 
-def _acc(params, x, y, cfg, key):
-    logits = forward(params, x, cfg, key)
-    return float((jnp.argmax(logits, 1) == y).mean())
+def _acc(params, x, y, cfg, key, batch: int = 64):
+    """Accuracy through a *programmed-once* network (weight-stationary,
+    DESIGN.md §5): the devices are programmed one time for the given
+    ``(cfg, key)`` and reused across every evaluation batch — the
+    deployment flow — instead of re-programming per forward call."""
+    programmed = program_net(params, cfg, key)
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(params, x[i : i + batch], cfg, key, programmed)
+        hits += int((jnp.argmax(logits, 1) == y[i : i + batch]).sum())
+    return hits / x.shape[0]
 
 
 def run(bit_range=(2, 3, 4, 5, 6, 8), variations=(0.0, 0.02, 0.05, 0.1, 0.2)):
@@ -61,6 +75,9 @@ def run(bit_range=(2, 3, 4, 5, 6, 8), variations=(0.0, 0.02, 0.05, 0.1, 0.2)):
             input_spec=sp, weight_spec=sp, var=var, mode="fast",
             noise_mode="program" if var > 0 else "off",
         )
+        # one programmed model per noise trial: re-programmed only when
+        # the programming key changes (each trial = one fresh device
+        # programming), reused across the whole test set within a trial
         accs = [
             _acc(params, x_test, y_test, cfg, jax.random.PRNGKey(10 + c))
             for c in range(5)

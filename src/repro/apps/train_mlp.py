@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DPEConfig, spec
-from repro.core.layers import mem_linear, mem_matmul
+from repro.core import DPEConfig, program_weight, spec
+from repro.core.layers import mem_linear, mem_matmul, mem_matmul_prepared
 
 IMG = 12
 N_CLASSES = 8
@@ -62,12 +62,14 @@ def img2col(x, k: int):
     return cols.reshape(b, oh, ow, k * k * c), (oh, ow)
 
 
-def conv_mem(x, w, cfg, key, k: int):
+def conv_mem(x, w, cfg, key, k: int, prepared=None):
     cols, (oh, ow) = img2col(x, k)
     b = x.shape[0]
     flat = cols.reshape(b * oh * ow, -1)
     if cfg is None:
         out = flat @ w
+    elif prepared is not None:
+        out = mem_matmul_prepared(flat, prepared, w.shape[1], cfg)
     else:
         out = mem_matmul(flat, w, key, cfg)
     return out.reshape(b, oh, ow, -1)
@@ -86,19 +88,35 @@ def init_net(key):
     }
 
 
-def forward(params, x, cfg, key):
-    h = jax.nn.relu(conv_mem(x, params["c1"], cfg, key, 3))  # 10x10
+def program_net(params, cfg, key):
+    """Program the whole net once (the paper's ``load_state_dict`` +
+    ``update_weight`` deployment flow; DESIGN.md §5).  Every layer shares
+    ``key``, mirroring :func:`forward`'s per-call behaviour."""
+    if cfg is None:
+        return None
+    return {k: program_weight(w, cfg, key) for k, w in params.items()}
+
+
+def forward(params, x, cfg, key, programmed=None):
+    pg = programmed or {}
+    h = jax.nn.relu(
+        conv_mem(x, params["c1"], cfg, key, 3, pg.get("c1"))
+    )  # 10x10
     h = jax.lax.reduce_window(
         h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
     )  # 5x5
-    h = jax.nn.relu(conv_mem(h, params["c2"], cfg, key, 3))  # 3x3
+    h = jax.nn.relu(
+        conv_mem(h, params["c2"], cfg, key, 3, pg.get("c2"))
+    )  # 3x3
     h = h.reshape(h.shape[0], 3, 3, -1)[:, ::1]
     h = jax.lax.reduce_window(
         h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 1, 1, 1), "VALID"
     )  # 2x2
     h = h.reshape(h.shape[0], -1)
-    h = jax.nn.relu(mem_linear(h, params["fc1"], None, cfg, key))
-    return mem_linear(h, params["fc2"], None, cfg, key)
+    h = jax.nn.relu(
+        mem_linear(h, params["fc1"], None, cfg, key, prepared=pg.get("fc1"))
+    )
+    return mem_linear(h, params["fc2"], None, cfg, key, prepared=pg.get("fc2"))
 
 
 def run(

@@ -43,10 +43,14 @@ from .slicing import SliceSpec, slice_int, slice_significances
 
 __all__ = [
     "PreparedWeight",
+    "FoldedWeight",
     "prepare_weight",
     "prepare_input",
+    "program_weight",
     "dpe_matmul",
     "dpe_matmul_prepared",
+    "dpe_matmul_folded",
+    "dpe_apply",
     "resolve_backend",
     "relative_error",
 ]
@@ -61,6 +65,16 @@ class PreparedWeight(NamedTuple):
 
     slices: jax.Array
     scale: jax.Array
+
+
+class FoldedWeight(NamedTuple):
+    """Fast-mode programmed state: the digitally-folded noisy effective
+    weight (Kp, Np) in ``cfg.store_dtype`` (see :func:`fold_weight_noisy`).
+    O(K*N) memory instead of the O(Sw*K*N) slice stack — what a
+    weight-stationary deployment keeps resident per fast-mode layer
+    (DESIGN.md §5)."""
+
+    w_eff: jax.Array
 
 
 def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -492,6 +506,56 @@ def dpe_matmul_prepared(
     return y[:, :n].reshape(*lead, n)
 
 
+def dpe_matmul_folded(
+    x: jax.Array,
+    fw: FoldedWeight,
+    n: int,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Fast-mode ``x @ w`` through an already-folded noisy weight."""
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    x_deq = fake_quant_input(xm, cfg).astype(fw.w_eff.dtype)
+    y = (x_deq @ fw.w_eff)[:, :n]
+    return y.reshape(*lead, n).astype(jnp.float32)
+
+
+def program_weight(
+    w: jax.Array, cfg: DPEConfig | None, key: jax.Array | None = None
+) -> PreparedWeight | FoldedWeight | None:
+    """Program one weight matrix for ``cfg``'s mode (the weight-stationary
+    ``update_weight()`` artifact, DESIGN.md §5).
+
+    Returns the per-layer programmed state a serving deployment keeps
+    resident: :class:`PreparedWeight` (faithful / circuit — slices +
+    block scales), :class:`FoldedWeight` (fast — store_dtype-compressed
+    effective weight), or ``None`` for digital layers.
+
+    Determinism contract: programming is a pure function of
+    ``(w, cfg, key)`` — the same key yields bit-identical state, which is
+    what lets a weight-stationary deployment re-program only when the key
+    changes (DESIGN.md §5).
+    """
+    if cfg is None or cfg.mode == "digital":
+        return None
+    if cfg.mode == "fast":
+        return FoldedWeight(fold_weight_noisy(w, cfg, key))
+    return prepare_weight(w, cfg, key)
+
+
+def dpe_apply(
+    x: jax.Array,
+    prog: PreparedWeight | FoldedWeight,
+    n: int,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """``x @ w`` through programmed state from :func:`program_weight` —
+    the decode-loop hot path pays only ``prepare_input`` + the GEMM."""
+    if isinstance(prog, FoldedWeight):
+        return dpe_matmul_folded(x, prog, n, cfg)
+    return dpe_matmul_prepared(x, prog, n, cfg)
+
+
 def dpe_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -503,17 +567,7 @@ def dpe_matmul(
         return (
             x.astype(jnp.float32) @ w.astype(jnp.float32)
         )
-    if cfg.mode == "fast":
-        # single-pass folded pipeline (memory-optimal; see fold_weight_noisy)
-        lead = x.shape[:-1]
-        k, n = w.shape
-        xm = x.reshape(-1, k)
-        w_eff = fold_weight_noisy(w, cfg, key)
-        x_deq = fake_quant_input(xm, cfg).astype(w_eff.dtype)
-        y = (x_deq @ w_eff)[:, :n]
-        return y.reshape(*lead, n).astype(jnp.float32)
-    pw = prepare_weight(w, cfg, key)
-    return dpe_matmul_prepared(x, pw, w.shape[1], cfg)
+    return dpe_apply(x, program_weight(w, cfg, key), w.shape[1], cfg)
 
 
 def relative_error(sim: jax.Array, ideal: jax.Array) -> jax.Array:

@@ -22,10 +22,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .dpe import dpe_matmul
+from .dpe import FoldedWeight, PreparedWeight, dpe_apply, dpe_matmul
 from .engine import DPEConfig
 
-__all__ = ["mem_matmul", "mem_linear", "MemPolicy", "layer_key"]
+__all__ = [
+    "mem_matmul",
+    "mem_matmul_prepared",
+    "mem_linear",
+    "MemPolicy",
+    "layer_key",
+]
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -67,16 +73,36 @@ def _bwd(cfg, res, g):
 mem_matmul.defvjp(_fwd, _bwd)
 
 
+def mem_matmul_prepared(
+    x: jax.Array,
+    prog: PreparedWeight | FoldedWeight,
+    n: int,
+    cfg: DPEConfig,
+) -> jax.Array:
+    """Weight-stationary ``x @ w`` through already-programmed crossbar
+    state (no STE wrapper — inference only; training re-programs per step,
+    which is the paper's ``update_weight()`` semantics)."""
+    return dpe_apply(x, prog, n, cfg).astype(x.dtype)
+
+
 def mem_linear(
     x: jax.Array,
     w: jax.Array,
     b: jax.Array | None,
     cfg: DPEConfig | None,
     key: jax.Array,
+    prepared: PreparedWeight | FoldedWeight | None = None,
 ) -> jax.Array:
-    """The paper's ``LinearMem``: hardware matmul + (digital) bias."""
+    """The paper's ``LinearMem``: hardware matmul + (digital) bias.
+
+    ``prepared`` is optional programmed state from
+    :func:`repro.core.dpe.program_weight`; when given, the call skips the
+    per-call weight pipeline entirely (DESIGN.md §5).
+    """
     if cfg is None or cfg.mode == "digital":
         y = x @ w.astype(x.dtype)
+    elif prepared is not None:
+        y = mem_matmul_prepared(x, prepared, w.shape[1], cfg)
     else:
         y = mem_matmul(x, w, key, cfg)
     if b is not None:

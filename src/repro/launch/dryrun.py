@@ -35,7 +35,7 @@ from repro.distributed.sharding import (
     rules_context,
 )
 from repro.launch.mesh import make_production_mesh
-from repro.models import init_params
+from repro.models import init_params, program_params
 from repro.models.model import init_cache
 from repro.optim import adafactor, adamw
 from repro.roofline.analysis import (
@@ -144,13 +144,37 @@ def lower_cell(arch: str, shape_name: str, mesh, mode: str):
             tok_sh = batch_sharding_rules(
                 {"tokens": tokens_abs}, mesh
             )["tokens"]
-            jitted = jax.jit(
-                step_fn,
-                in_shardings=(params_sh, cache_sh, tok_sh),
-                out_shardings=(replicated(mesh), cache_sh),
-                donate_argnums=(1,),  # KV cache aliases in->out
+            # weight-stationary decode: program once, lower the decode
+            # step against the resident programmed state (replicated for
+            # now; sharding the programmed slices over the model axis is
+            # the next scaling step — ROADMAP)
+            prog_abs = jax.eval_shape(
+                lambda p: program_params(
+                    p, cfg, policy, jax.random.PRNGKey(0)
+                ),
+                params_abs,
             )
-            lowered = jitted.lower(params_abs, cache_abs, tokens_abs)
+            if prog_abs is None:
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(params_sh, cache_sh, tok_sh),
+                    out_shardings=(replicated(mesh), cache_sh),
+                    donate_argnums=(1,),  # KV cache aliases in->out
+                )
+                lowered = jitted.lower(params_abs, cache_abs, tokens_abs)
+            else:
+                prog_sh = jax.tree.map(
+                    lambda _: replicated(mesh), prog_abs
+                )
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(params_sh, cache_sh, tok_sh, prog_sh),
+                    out_shardings=(replicated(mesh), cache_sh),
+                    donate_argnums=(1,),  # KV cache aliases in->out
+                )
+                lowered = jitted.lower(
+                    params_abs, cache_abs, tokens_abs, prog_abs
+                )
     mflops = model_step_flops(cfg, batch, seq, kind)
     return lowered, dict(chips=chips, model_flops=mflops, kind=kind)
 

@@ -1,6 +1,12 @@
 """Serving driver: batched greedy generation through the (optionally
 memristive) model.
 
+Weight-stationary by default (DESIGN.md §5): the model is programmed
+once via ``program_params`` and every decode step reuses the resident
+crossbar state.  ``--per_call`` reverts to the legacy inline
+re-programming path (the paper's training-time semantics) — useful for
+measuring what program-once buys:
+
     PYTHONPATH=src python -m repro.launch.serve \
         --arch rwkv6-1.6b --smoke --batch 4 --prompt_len 16 --gen 16 \
         --policy mem_fast
@@ -15,7 +21,7 @@ import jax.numpy as jnp
 
 from repro import configs as arch_configs
 from repro.launch.dryrun import make_policy
-from repro.models import init_params
+from repro.models import init_params, program_params, programmed_byte_size
 from repro.serve import greedy_generate
 
 
@@ -28,6 +34,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="digital",
                     choices=["digital", "mem_fast", "mem_faithful"])
+    ap.add_argument("--per_call", action="store_true",
+                    help="re-program every call (legacy path) instead of "
+                         "programming once")
     args = ap.parse_args(argv)
 
     cfg = (
@@ -51,14 +60,25 @@ def main(argv=None):
             jax.random.PRNGKey(3),
             (args.batch, cfg.encoder.n_frames, cfg.d_model),
         )
+    programmed = None
+    if not args.per_call and policy.enabled:
+        t0 = time.time()
+        programmed = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+        jax.block_until_ready(jax.tree.leaves(programmed))
+        mb = programmed_byte_size(programmed) / 1e6
+        print(f"programmed {mb:.1f} MB of crossbar state in "
+              f"{time.time() - t0:.2f}s")
     t0 = time.time()
     out = greedy_generate(
         params, cfg, prompts, args.gen, policy=policy,
         compute_dtype=jnp.float32, extra_batch=extra or None,
+        programmed=programmed,
+        weight_stationary=not args.per_call,
     )
     dt = time.time() - t0
+    mode = "per-call" if args.per_call else "programmed"
     print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s)")
+          f"({args.batch*args.gen/dt:.1f} tok/s, {mode})")
     print("sample:", out[0][:16].tolist())
     return out
 

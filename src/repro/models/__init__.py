@@ -6,6 +6,7 @@ precision — MemIntelli's technique as a first-class LM feature.
 """
 from .config import ArchConfig, MoEConfig, SSMConfig, EncoderConfig
 from .model import init_params, forward, decode_step, loss_fn
+from .programmed import program_params, programmed_byte_size
 
 __all__ = [
     "ArchConfig",
@@ -16,4 +17,6 @@ __all__ = [
     "forward",
     "decode_step",
     "loss_fn",
+    "program_params",
+    "programmed_byte_size",
 ]

@@ -22,7 +22,7 @@ from jax import lax
 
 from repro.distributed.sharding import constrain
 
-from .common import apply_rope, dense, make_dense_params, rms_norm, rope
+from .common import apply_rope, dense, make_dense_params, pget, rms_norm, rope
 
 __all__ = [
     "init_attn_params",
@@ -249,19 +249,24 @@ def attention_block(
     kv_in=None,
     dense_threshold=1024,
     attn_schedule="masked",
+    prepared=None,
 ):
     """Full attention block on a sequence (train / prefill).
 
     Returns (output, (k, v)) so callers can build the serving cache.
     ``kv_in``: (k, v) for cross-attention (whisper decoder).
+    ``prepared``: programmed state mirroring ``p`` (q_proj/k_proj/...).
     """
     b, s, d = x.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = dense(p["q_proj"], x, name=f"{name}.q", policy=policy, rng=rng)
+    q = dense(p["q_proj"], x, name=f"{name}.q", policy=policy, rng=rng,
+              prepared=pget(prepared, "q_proj"))
     q = _split_heads(q, nh, hd)
     if kv_in is None:
-        k = dense(p["k_proj"], x, name=f"{name}.k", policy=policy, rng=rng)
-        v = dense(p["v_proj"], x, name=f"{name}.v", policy=policy, rng=rng)
+        k = dense(p["k_proj"], x, name=f"{name}.k", policy=policy, rng=rng,
+                  prepared=pget(prepared, "k_proj"))
+        v = dense(p["v_proj"], x, name=f"{name}.v", policy=policy, rng=rng,
+                  prepared=pget(prepared, "v_proj"))
         k = _split_heads(k, nkv, hd)
         v = _split_heads(v, nkv, hd)
     else:
@@ -290,12 +295,14 @@ def attention_block(
         )
     out = constrain(out, "batch", "seq", "heads", "head_dim")
     out = out.reshape(b, s, nh * hd)
-    y = dense(p["o_proj"], out, name=f"{name}.o", policy=policy, rng=rng)
+    y = dense(p["o_proj"], out, name=f"{name}.o", policy=policy, rng=rng,
+              prepared=pget(prepared, "o_proj"))
     return y, (k, v)
 
 
 def decode_attention_block(
-    p, x1, cfg, *, policy, rng, cache_k, cache_v, pos, name, cross=False
+    p, x1, cfg, *, policy, rng, cache_k, cache_v, pos, name, cross=False,
+    prepared=None,
 ):
     """One-token attention block against the cache.
 
@@ -306,14 +313,17 @@ def decode_attention_block(
     """
     b, d = x1.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = dense(p["q_proj"], x1, name=f"{name}.q", policy=policy, rng=rng)
+    q = dense(p["q_proj"], x1, name=f"{name}.q", policy=policy, rng=rng,
+              prepared=pget(prepared, "q_proj"))
     q = q.reshape(b, nh, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"]["scale"])
     new_k1 = new_v1 = None
     if not cross:
-        k1 = dense(p["k_proj"], x1, name=f"{name}.k", policy=policy, rng=rng)
-        v1 = dense(p["v_proj"], x1, name=f"{name}.v", policy=policy, rng=rng)
+        k1 = dense(p["k_proj"], x1, name=f"{name}.k", policy=policy, rng=rng,
+                   prepared=pget(prepared, "k_proj"))
+        v1 = dense(p["v_proj"], x1, name=f"{name}.v", policy=policy, rng=rng,
+                   prepared=pget(prepared, "v_proj"))
         k1 = k1.reshape(b, nkv, hd)
         v1 = v1.reshape(b, nkv, hd)
         if cfg.qk_norm:
@@ -334,6 +344,6 @@ def decode_attention_block(
     )
     y = dense(
         p["o_proj"], out.reshape(b, nh * hd), name=f"{name}.o",
-        policy=policy, rng=rng,
+        policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),
     )
     return y, cache_k, cache_v

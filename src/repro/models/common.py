@@ -13,6 +13,7 @@ from repro.core.layers import MemPolicy, layer_key, mem_linear
 
 __all__ = [
     "dense",
+    "pget",
     "rms_norm",
     "layer_norm",
     "activation",
@@ -23,6 +24,17 @@ __all__ = [
 ]
 
 
+def pget(prepared: dict | None, key: str):
+    """Fetch one entry of a programmed-state subtree that may be absent.
+
+    Programmed pytrees mirror the params structure (DESIGN.md §5);
+    ``None`` anywhere means "no programmed state — fall back to per-call
+    programming", so lookups must tolerate a missing parent."""
+    if prepared is None:
+        return None
+    return prepared.get(key)
+
+
 def dense(
     params: dict,
     x: jax.Array,
@@ -30,14 +42,21 @@ def dense(
     name: str,
     policy: MemPolicy,
     rng: jax.Array,
+    prepared=None,
 ) -> jax.Array:
     """Linear layer routed through the mem policy.
 
     ``params`` holds {"w": (K, N)[, "b": (N,)]}; ``name`` is the logical
     layer name the policy matches on; ``rng`` drives programming noise.
+    ``prepared`` is this layer's programmed state (PreparedWeight /
+    FoldedWeight) from :func:`repro.models.programmed.program_params`;
+    when given, the crossbars are not re-programmed on this call.
     """
     cfg = policy.config_for(name)
-    return mem_linear(x, params["w"], params.get("b"), cfg, layer_key(rng, name))
+    return mem_linear(
+        x, params["w"], params.get("b"), cfg, layer_key(rng, name),
+        prepared=prepared,
+    )
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -28,6 +28,7 @@ from .common import (
     make_dense_params,
     make_norm_params,
     norm,
+    pget,
     uniform_init,
 )
 from .config import ArchConfig
@@ -144,16 +145,17 @@ def _sinusoid(positions, d):
 
 def _scan_blocks(
     params_seg, x, cfg, tmpl, *, policy, rng, positions, remat,
-    collect_states=False, attn_schedule="masked",
+    collect_states=False, attn_schedule="masked", prog_seg=None,
 ):
     steps = jax.tree_util.tree_leaves(params_seg)[0].shape[0]
 
     def step(x, inp):
-        p_l, idx = inp
+        p_l, prog_l, idx = inp
         rng_l = jax.random.fold_in(rng, idx)
         x, states = block_forward(
             p_l, x, cfg, tmpl, policy=policy, rng=rng_l,
             positions=positions, attn_schedule=attn_schedule,
+            prepared=prog_l,
         )
         # Megatron-SP: shard the between-layer carry (and therefore each
         # layer's remat checkpoint) along the sequence over `model`.
@@ -162,7 +164,7 @@ def _scan_blocks(
 
     fn = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable) \
         if remat else step
-    x, states = lax.scan(fn, x, (params_seg, jnp.arange(steps)))
+    x, states = lax.scan(fn, x, (params_seg, prog_seg, jnp.arange(steps)))
     return x, states
 
 
@@ -176,19 +178,26 @@ def forward(
     mode: str = "train",
     compute_dtype=jnp.bfloat16,
     remat: bool = True,
+    programmed=None,
 ):
     """Returns hidden states (B, S, d) after final norm, plus per-segment
-    serving states when ``mode == 'prefill'``."""
+    serving states when ``mode == 'prefill'``.
+
+    ``programmed``: weight-stationary state from
+    :func:`repro.models.programmed.program_params` — when given, no
+    hardware layer re-programs its crossbars (inference; training keeps
+    the per-step re-programming semantics of the paper)."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if cfg.encoder is not None:
         return _encdec_forward(
             params, cfg, batch, policy=policy, rng=rng, mode=mode,
-            compute_dtype=compute_dtype, remat=remat,
+            compute_dtype=compute_dtype, remat=remat, programmed=programmed,
         )
     x = _embed_inputs(params, cfg, batch, compute_dtype)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     all_states = {}
+    prog_blocks = pget(programmed, "blocks")
     for si, (start, steps, tmpl) in enumerate(segments(cfg)):
         x, states = _scan_blocks(
             params["blocks"][f"seg{si}"], x, cfg, tmpl,
@@ -199,6 +208,7 @@ def forward(
             # deployment can flip trains to "masked" if the unrolled
             # schedule's backward peak memory binds (EXPERIMENTS §Perf)
             attn_schedule="tri",
+            prog_seg=pget(prog_blocks, f"seg{si}"),
         )
         all_states[f"seg{si}"] = states
     x = norm(x, params["final_norm"], cfg.norm)
@@ -333,38 +343,45 @@ def decode_step(
     policy: MemPolicy = DIGITAL,
     rng=None,
     compute_dtype=jnp.bfloat16,
+    programmed=None,
 ):
-    """One serving step: consume `tokens`, return (logits (B,V), cache)."""
+    """One serving step: consume `tokens`, return (logits (B,V), cache).
+
+    With ``programmed`` state the decode hot path never re-runs the
+    weight pipeline — each token pays prepare_input + the GEMM only."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if cfg.encoder is not None:
         return _encdec_decode(
             params, cfg, cache, tokens, policy=policy, rng=rng,
-            compute_dtype=compute_dtype,
+            compute_dtype=compute_dtype, programmed=programmed,
         )
     x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
     pos = cache["pos"]
     new_cache = {"pos": pos + 1, "blocks": {}}
+    prog_blocks = pget(programmed, "blocks")
     for si, (start, steps, tmpl) in enumerate(segments(cfg)):
         seg_p = params["blocks"][f"seg{si}"]
         seg_c = cache["blocks"][f"seg{si}"]
+        prog_seg = pget(prog_blocks, f"seg{si}")
         rng_s = jax.random.fold_in(rng, si)
 
         def step(x1, inp):
-            p_l, c_l, idx = inp
+            p_l, prog_l, c_l, idx = inp
             rng_l = jax.random.fold_in(rng_s, idx)
             x1, st = block_decode(
                 p_l, x1, cfg, tmpl, policy=policy, rng=rng_l, pos=pos,
-                state=c_l,
+                state=c_l, prepared=prog_l,
             )
             return x1, st
 
         x1, new_states = lax.scan(
-            step, x1, (seg_p, seg_c, jnp.arange(steps))
+            step, x1, (seg_p, prog_seg, seg_c, jnp.arange(steps))
         )
         new_cache["blocks"][f"seg{si}"] = new_states
     x1 = norm(x1, params["final_norm"], cfg.norm)
     logits = dense(
-        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng
+        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng,
+        prepared=pget(programmed, "lm_head"),
     ).astype(jnp.float32)
     logits = constrain(logits, "batch", "vocab")
     return logits, new_cache
@@ -375,27 +392,31 @@ def decode_step(
 # ---------------------------------------------------------------------------
 
 def _encdec_forward(
-    params, cfg, batch, *, policy, rng, mode, compute_dtype, remat
+    params, cfg, batch, *, policy, rng, mode, compute_dtype, remat,
+    programmed=None,
 ):
     frames = batch["frames"].astype(compute_dtype)  # (B, F, d) stubbed
     b, f, d = frames.shape
     pos_e = jnp.broadcast_to(jnp.arange(f), (b, f))
     x = frames + _sinusoid(pos_e, d).astype(compute_dtype)
     enc_blocks = params["encoder"]["blocks"]
+    prog_enc = pget(pget(programmed, "encoder"), "blocks")
 
     def enc_step(x, inp):
-        p_l, idx = inp
+        p_l, prog_l, idx = inp
         h = norm(x, p_l["norm1"], cfg.norm)
         y, _ = attention_block(
             p_l["attn"], h, cfg, policy=policy,
             rng=jax.random.fold_in(rng, 1000 + idx),
             positions=pos_e, name="enc.attn",
+            prepared=pget(prog_l, "attn"),
         )
         x = x + y
         h = norm(x, p_l["norm2"], cfg.norm)
         x = x + _ffn_forward(
             p_l, h, cfg, policy=policy,
             rng=jax.random.fold_in(rng, 2000 + idx), name="enc",
+            prepared=prog_l,
         )
         return x, None
 
@@ -404,7 +425,7 @@ def _encdec_forward(
         enc_step = jax.checkpoint(
             enc_step, policy=jax.checkpoint_policies.nothing_saveable
         )
-    x, _ = lax.scan(enc_step, x, (enc_blocks, jnp.arange(nenc)))
+    x, _ = lax.scan(enc_step, x, (enc_blocks, prog_enc, jnp.arange(nenc)))
     enc_out = norm(x, params["encoder"]["final_norm"], cfg.norm)
 
     tokens = batch["tokens"]
@@ -413,21 +434,27 @@ def _encdec_forward(
     pos_d = jnp.broadcast_to(jnp.arange(s), (bt, s))
     xd = xd + _sinusoid(pos_d, d).astype(compute_dtype)
 
+    prog_seg0 = pget(pget(programmed, "blocks"), "seg0")
+    prog_cross = pget(programmed, "cross")
+
     def dec_step(xd, inp):
-        p_l, p_x, idx = inp
+        p_l, p_x, prog_l, prog_x, idx = inp
         rng_l = jax.random.fold_in(rng, idx)
         xd, st = block_forward(
-            p_l, xd, cfg, 0, policy=policy, rng=rng_l, positions=pos_d
+            p_l, xd, cfg, 0, policy=policy, rng=rng_l, positions=pos_d,
+            prepared=prog_l,
         )
         # cross-attention sublayer
         h = norm(xd, p_x["norm"], cfg.norm)
-        kx = dense(p_x["k_proj"], enc_out, name="dec.cross.k", policy=policy, rng=rng_l)
-        vx = dense(p_x["v_proj"], enc_out, name="dec.cross.v", policy=policy, rng=rng_l)
+        kx = dense(p_x["k_proj"], enc_out, name="dec.cross.k", policy=policy,
+                   rng=rng_l, prepared=pget(prog_x, "k_proj"))
+        vx = dense(p_x["v_proj"], enc_out, name="dec.cross.v", policy=policy,
+                   rng=rng_l, prepared=pget(prog_x, "v_proj"))
         kx = kx.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
         vx = vx.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
         y, _ = attention_block(
             p_x, h, cfg, policy=policy, rng=rng_l, positions=pos_d,
-            name="dec.cross", kv_in=(kx, vx),
+            name="dec.cross", kv_in=(kx, vx), prepared=prog_x,
         )
         xd = xd + y
         return xd, (st, (kx, vx))
@@ -439,7 +466,13 @@ def _encdec_forward(
     xd, (self_states, cross_kv) = lax.scan(
         dec_step,
         xd,
-        (params["blocks"]["seg0"], params["cross"], jnp.arange(cfg.n_layers)),
+        (
+            params["blocks"]["seg0"],
+            params["cross"],
+            prog_seg0,
+            prog_cross,
+            jnp.arange(cfg.n_layers),
+        ),
     )
     xd = norm(xd, params["final_norm"], cfg.norm)
     if mode == "prefill":
@@ -450,7 +483,8 @@ def _encdec_forward(
     return xd
 
 
-def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype):
+def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype,
+                   programmed=None):
     d = cfg.d_model
     x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
     pos = cache["pos"]
@@ -458,19 +492,22 @@ def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype):
     new_cache = {"pos": pos + 1, "blocks": {}, "cross_kv": cache["cross_kv"]}
     seg_p = params["blocks"]["seg0"]
     seg_c = cache["blocks"]["seg0"]
+    prog_seg0 = pget(pget(programmed, "blocks"), "seg0")
+    prog_cross = pget(programmed, "cross")
     fr = cfg.encoder.n_frames
 
     def step(x1, inp):
-        p_l, p_x, c_l, kx, vx, idx = inp
+        p_l, p_x, prog_l, prog_x, c_l, kx, vx, idx = inp
         rng_l = jax.random.fold_in(rng, idx)
         x1, st = block_decode(
-            p_l, x1, cfg, 0, policy=policy, rng=rng_l, pos=pos, state=c_l
+            p_l, x1, cfg, 0, policy=policy, rng=rng_l, pos=pos, state=c_l,
+            prepared=prog_l,
         )
         h = norm(x1, p_x["norm"], cfg.norm)
         enc_pos = jnp.full_like(pos, fr - 1)
         y, _, _ = decode_attention_block(
             p_x, h, cfg, policy=policy, rng=rng_l, cache_k=kx, cache_v=vx,
-            pos=enc_pos, name="dec.cross", cross=True,
+            pos=enc_pos, name="dec.cross", cross=True, prepared=prog_x,
         )
         x1 = x1 + y
         return x1, st
@@ -481,6 +518,8 @@ def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype):
         (
             seg_p,
             params["cross"],
+            prog_seg0,
+            prog_cross,
             seg_c,
             cache["cross_kv"]["k"],
             cache["cross_kv"]["v"],
@@ -490,6 +529,7 @@ def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype):
     new_cache["blocks"]["seg0"] = new_states
     x1 = norm(x1, params["final_norm"], cfg.norm)
     logits = dense(
-        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng
+        params["lm_head"], x1, name="lm_head", policy=policy, rng=rng,
+        prepared=pget(programmed, "lm_head"),
     ).astype(jnp.float32)
     return logits, new_cache

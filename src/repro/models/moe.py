@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
 
-from .common import activation, dense, make_dense_params, uniform_init
+from .common import activation, dense, make_dense_params, pget, uniform_init
 
 __all__ = ["init_moe_params", "moe_block", "moe_capacity"]
 
@@ -76,7 +76,7 @@ def _dispatch_indices(eidx, n_experts, capacity):
     return buf_token_idx, slot, valid, token
 
 
-def moe_block(p, x, cfg, *, policy, rng, name):
+def moe_block(p, x, cfg, *, policy, rng, name, prepared=None):
     """x: (B, S, d) -> (B, S, d)."""
     m = cfg.moe
     b, s, d = x.shape
@@ -85,7 +85,8 @@ def moe_block(p, x, cfg, *, policy, rng, name):
     # keep the router output in the stream dtype: an f32 cast here makes
     # the router's input-cotangent f32 and promotes the entire backward
     # carry chain (and its psums) to f32 (§Perf, kimi cell)
-    gates = dense(p["router"], x, name=f"{name}.router", policy=policy, rng=rng)
+    gates = dense(p["router"], x, name=f"{name}.router", policy=policy,
+                  rng=rng, prepared=pget(prepared, "router"))
     probs = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
     top_p, top_e = jax.lax.top_k(probs, m.top_k)  # (B, S, k)
     top_p = top_p / jnp.maximum(
@@ -106,17 +107,28 @@ def moe_block(p, x, cfg, *, policy, rng, name):
     if mem_cfg is not None and mem_cfg.mode != "digital":
         # the paper's technique on the expert matmuls: vmap the simulated
         # DPE over the (sharded) expert axis
-        from repro.core.layers import layer_key, mem_matmul
+        from repro.core.layers import layer_key, mem_matmul, mem_matmul_prepared
 
-        key = layer_key(rng, f"{name}.experts")
+        prog_experts = pget(prepared, "experts")
         bufe = buf.swapaxes(0, 1).reshape(e, b * cap, d)  # (E, T, d)
-        mm = lambda x2, w2, i: mem_matmul(
-            x2, w2, jax.random.fold_in(key, i), mem_cfg
-        )
-        h = jax.vmap(mm)(bufe, wi, jnp.arange(e))
-        g = jax.vmap(mm)(bufe, wg, jnp.arange(e) + e)
-        h = activation(g, cfg.act) * h
-        out = jax.vmap(mm)(h, wo, jnp.arange(e) + 2 * e)
+        if prog_experts is not None:
+            # weight-stationary: crossbars already hold the expert slices
+            mmp = lambda n2: lambda x2, pw: mem_matmul_prepared(
+                x2, pw, n2, mem_cfg
+            )
+            h = jax.vmap(mmp(wi.shape[2]))(bufe, prog_experts["wi"])
+            g = jax.vmap(mmp(wg.shape[2]))(bufe, prog_experts["wg"])
+            h = activation(g, cfg.act) * h
+            out = jax.vmap(mmp(wo.shape[2]))(h, prog_experts["wo"])
+        else:
+            key = layer_key(rng, f"{name}.experts")
+            mm = lambda x2, w2, i: mem_matmul(
+                x2, w2, jax.random.fold_in(key, i), mem_cfg
+            )
+            h = jax.vmap(mm)(bufe, wi, jnp.arange(e))
+            g = jax.vmap(mm)(bufe, wg, jnp.arange(e) + e)
+            h = activation(g, cfg.act) * h
+            out = jax.vmap(mm)(h, wo, jnp.arange(e) + 2 * e)
         out = out.reshape(e, b, cap, d).swapaxes(0, 1)
     else:
         h = jnp.einsum("becd,edf->becf", buf, wi.astype(buf.dtype))

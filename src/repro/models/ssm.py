@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .common import dense, make_dense_params, uniform_init
+from .common import dense, make_dense_params, pget, uniform_init
 
 __all__ = [
     "init_rwkv6_params",
@@ -165,7 +165,8 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int = 32):
     return outs, state
 
 
-def rwkv6_block(p, x, cfg, *, policy, rng, name, state=None, x_prev=None):
+def rwkv6_block(p, x, cfg, *, policy, rng, name, state=None, x_prev=None,
+                prepared=None):
     """Full-sequence RWKV6 time-mix.  Returns (y, (state, x_last))."""
     b, s, d = x.shape
     nh, hd = _rwkv_dims(cfg)
@@ -175,11 +176,15 @@ def rwkv6_block(p, x, cfg, *, policy, rng, name, state=None, x_prev=None):
         first = x_prev[:, None, :]
     x_shift = jnp.concatenate([first, x[:, :-1]], axis=1)
     xw, xk, xv, xr, xg = _rwkv6_mix(p, x, x_shift)
-    r = dense(p["r_proj"], xr, name=f"{name}.r", policy=policy, rng=rng)
-    k = dense(p["k_proj_ssm"], xk, name=f"{name}.k", policy=policy, rng=rng)
-    v = dense(p["v_proj_ssm"], xv, name=f"{name}.v", policy=policy, rng=rng)
+    r = dense(p["r_proj"], xr, name=f"{name}.r", policy=policy, rng=rng,
+              prepared=pget(prepared, "r_proj"))
+    k = dense(p["k_proj_ssm"], xk, name=f"{name}.k", policy=policy, rng=rng,
+              prepared=pget(prepared, "k_proj_ssm"))
+    v = dense(p["v_proj_ssm"], xv, name=f"{name}.v", policy=policy, rng=rng,
+              prepared=pget(prepared, "v_proj_ssm"))
     g = jax.nn.silu(
-        dense(p["g_proj"], xg, name=f"{name}.g", policy=policy, rng=rng)
+        dense(p["g_proj"], xg, name=f"{name}.g", policy=policy, rng=rng,
+              prepared=pget(prepared, "g_proj"))
     )
     # data-dependent decay (RWKV6 signature)
     wlo = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
@@ -207,7 +212,8 @@ def rwkv6_block(p, x, cfg, *, policy, rng, name, state=None, x_prev=None):
     )
     out = out * p["ln_x"]["scale"] + p["ln_x"]["bias"]
     out = (out.astype(x.dtype)) * g
-    y = dense(p["wkv_out"], out, name=f"{name}.o", policy=policy, rng=rng)
+    y = dense(p["wkv_out"], out, name=f"{name}.o", policy=policy, rng=rng,
+              prepared=pget(prepared, "wkv_out"))
     return y, (state, x[:, -1, :])
 
 
@@ -219,7 +225,8 @@ def init_rwkv6_state(cfg, batch, layers, dtype=jnp.float32):
     }
 
 
-def rwkv6_decode(p, x1, cfg, *, policy, rng, name, state, x_prev):
+def rwkv6_decode(p, x1, cfg, *, policy, rng, name, state, x_prev,
+                 prepared=None):
     """Single-token step.  x1: (B, d); state: (B,H,N,N).  Returns
     (y1, new_state, new_x_prev)."""
     y, (state, x_last) = rwkv6_block(
@@ -231,6 +238,7 @@ def rwkv6_decode(p, x1, cfg, *, policy, rng, name, state, x_prev):
         name=name,
         state=state,
         x_prev=x_prev,
+        prepared=prepared,
     )
     return y[:, 0], state, x_last
 
@@ -284,19 +292,24 @@ def _causal_conv(x, w, b, cache=None):
     return out + b.astype(x.dtype), new_cache
 
 
-def mamba_block(p, x, cfg, *, policy, rng, name, state=None, conv_cache=None):
+def mamba_block(p, x, cfg, *, policy, rng, name, state=None, conv_cache=None,
+                prepared=None):
     """Full-sequence selective scan.  Returns (y, (ssm_state, conv_cache))."""
     b, s, d = x.shape
     d_in, dt_rank, d_state, d_conv = _mamba_dims(cfg)
-    xin = dense(p["in_proj"], x, name=f"{name}.in", policy=policy, rng=rng)
-    z = dense(p["in_proj_z"], x, name=f"{name}.z", policy=policy, rng=rng)
+    xin = dense(p["in_proj"], x, name=f"{name}.in", policy=policy, rng=rng,
+                prepared=pget(prepared, "in_proj"))
+    z = dense(p["in_proj_z"], x, name=f"{name}.z", policy=policy, rng=rng,
+              prepared=pget(prepared, "in_proj_z"))
     xc, new_conv = _causal_conv(xin, p["conv"]["w"], p["conv"]["b"], conv_cache)
     xc = jax.nn.silu(xc)
-    xdbc = dense(p["x_proj"], xc, name=f"{name}.xp", policy=policy, rng=rng)
+    xdbc = dense(p["x_proj"], xc, name=f"{name}.xp", policy=policy, rng=rng,
+                 prepared=pget(prepared, "x_proj"))
     dt_low = xdbc[..., :dt_rank]
     bmat = xdbc[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
     cmat = xdbc[..., dt_rank + d_state :].astype(jnp.float32)
-    dt = dense(p["dt_proj"], dt_low, name=f"{name}.dt", policy=policy, rng=rng)
+    dt = dense(p["dt_proj"], dt_low, name=f"{name}.dt", policy=policy,
+               rng=rng, prepared=pget(prepared, "dt_proj"))
     dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,d_in)
     a = -jnp.exp(p["a_log"])  # (d_in, N)
 
@@ -323,7 +336,8 @@ def mamba_block(p, x, cfg, *, policy, rng, name, state=None, conv_cache=None):
     state, ys = lax.scan(step, state, xs, unroll=8 if s >= 64 else 1)
     y = ys.swapaxes(0, 1) + xc.astype(jnp.float32) * p["d_skip"]
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
-    out = dense(p["out_proj"], y, name=f"{name}.out", policy=policy, rng=rng)
+    out = dense(p["out_proj"], y, name=f"{name}.out", policy=policy, rng=rng,
+                prepared=pget(prepared, "out_proj"))
     if new_conv is None:
         new_conv = jnp.zeros((b, d_conv - 1, d_in), x.dtype)
     return out, (state, new_conv)
@@ -337,7 +351,8 @@ def init_mamba_state(cfg, batch, layers, dtype=jnp.bfloat16):
     }
 
 
-def mamba_decode(p, x1, cfg, *, policy, rng, name, state, conv_cache):
+def mamba_decode(p, x1, cfg, *, policy, rng, name, state, conv_cache,
+                 prepared=None):
     y, (state, conv_cache) = mamba_block(
         p,
         x1[:, None, :],
@@ -347,5 +362,6 @@ def mamba_decode(p, x1, cfg, *, policy, rng, name, state, conv_cache):
         name=name,
         state=state,
         conv_cache=conv_cache,
+        prepared=prepared,
     )
     return y[:, 0], state, conv_cache

@@ -20,7 +20,14 @@ from .attention import (
 )
 from repro.distributed.sharding import constrain
 
-from .common import activation, dense, make_dense_params, make_norm_params, norm
+from .common import (
+    activation,
+    dense,
+    make_dense_params,
+    make_norm_params,
+    norm,
+    pget,
+)
 from .moe import init_moe_params, moe_block
 from .ssm import (
     init_mamba_params,
@@ -95,18 +102,23 @@ def init_block_params(key, cfg, group_idx, dtype=jnp.float32):
     }
 
 
-def _ffn_forward(p, x, cfg, *, policy, rng, name):
+def _ffn_forward(p, x, cfg, *, policy, rng, name, prepared=None):
     if "moe" in p:
-        return moe_block(p["moe"], x, cfg, policy=policy, rng=rng, name=name)
+        return moe_block(p["moe"], x, cfg, policy=policy, rng=rng, name=name,
+                         prepared=pget(prepared, "moe"))
     mlp = p["mlp"]
-    h = dense(mlp["wi"], x, name=f"{name}.mlp.wi", policy=policy, rng=rng)
-    g = dense(mlp["wg"], x, name=f"{name}.mlp.wg", policy=policy, rng=rng)
+    prog = pget(prepared, "mlp")
+    h = dense(mlp["wi"], x, name=f"{name}.mlp.wi", policy=policy, rng=rng,
+              prepared=pget(prog, "wi"))
+    g = dense(mlp["wg"], x, name=f"{name}.mlp.wg", policy=policy, rng=rng,
+              prepared=pget(prog, "wg"))
     h = activation(g, cfg.act) * h
-    return dense(mlp["wo"], h, name=f"{name}.mlp.wo", policy=policy, rng=rng)
+    return dense(mlp["wo"], h, name=f"{name}.mlp.wo", policy=policy, rng=rng,
+                 prepared=pget(prog, "wo"))
 
 
 def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
-                   attn_schedule="masked"):
+                   attn_schedule="masked", prepared=None):
     """One layer on a full sequence.  ``states`` carries optional incoming
     SSM state; returns (x, serving_state_dict)."""
     kind, _ = cfg.layer_kind(layer_idx)
@@ -117,6 +129,7 @@ def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
         y, (k, v) = attention_block(
             p["attn"], h, cfg, policy=policy, rng=rng,
             positions=positions, name=name, attn_schedule=attn_schedule,
+            prepared=pget(prepared, "attn"),
         )
         out_state["k"] = k
         out_state["v"] = v
@@ -125,6 +138,7 @@ def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
             p["ssm"], h, cfg, policy=policy, rng=rng, name=name,
             state=None if states is None else states.get("s"),
             x_prev=None if states is None else states.get("x_prev"),
+            prepared=pget(prepared, "ssm"),
         )
         out_state["s"] = s
         out_state["x_prev"] = x_last
@@ -133,6 +147,7 @@ def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
             p["ssm"], h, cfg, policy=policy, rng=rng, name=name,
             state=None if states is None else states.get("h"),
             conv_cache=None if states is None else states.get("conv"),
+            prepared=pget(prepared, "ssm"),
         )
         out_state["h"] = s
         out_state["conv"] = conv
@@ -144,7 +159,9 @@ def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
         y = constrain(y, "batch", "seq_act", "embed")
     x = x + y
     h = norm(x, p["norm2"], cfg.norm)
-    y2 = _ffn_forward(p, h, cfg, policy=policy, rng=rng, name=name)
+    y2 = _ffn_forward(
+        p, h, cfg, policy=policy, rng=rng, name=name, prepared=prepared
+    )
     if x.ndim == 3:
         y2 = constrain(y2, "batch", "seq_act", "embed")
     x = x + y2
@@ -152,7 +169,7 @@ def _layer_forward(p, x, cfg, layer_idx, *, policy, rng, positions, states,
 
 
 def block_forward(p, x, cfg, template_idx, *, policy, rng, positions,
-                  attn_schedule="masked"):
+                  attn_schedule="masked", prepared=None):
     """One scan step (layer or hybrid group) on a full sequence.
 
     ``template_idx``: a representative global layer index — all layers in
@@ -163,19 +180,21 @@ def block_forward(p, x, cfg, template_idx, *, policy, rng, positions,
         return _layer_forward(
             p, x, cfg, template_idx,
             policy=policy, rng=rng, positions=positions, states=None,
-            attn_schedule=attn_schedule,
+            attn_schedule=attn_schedule, prepared=prepared,
         )
     states = {}
     for j in range(g):
         x, st = _layer_forward(
             p[f"l{j}"], x, cfg, j, policy=policy, rng=rng,
             positions=positions, states=None, attn_schedule=attn_schedule,
+            prepared=pget(prepared, f"l{j}"),
         )
         states[f"l{j}"] = st
     return x, states
 
 
-def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state):
+def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
+                  prepared=None):
     kind, _ = cfg.layer_kind(layer_idx)
     name = f"L.{kind}"
     h = norm(x1, p["norm1"], cfg.norm)
@@ -184,40 +203,45 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state):
         y, ck, cv = decode_attention_block(
             p["attn"], h, cfg, policy=policy, rng=rng,
             cache_k=state["k"], cache_v=state["v"], pos=pos, name=name,
+            prepared=pget(prepared, "attn"),
         )
         new_state["k"], new_state["v"] = ck, cv
     elif cfg.ssm.kind == "rwkv6":
         y, s, x_last = rwkv6_decode(
             p["ssm"], h, cfg, policy=policy, rng=rng, name=name,
             state=state["s"], x_prev=state["x_prev"],
+            prepared=pget(prepared, "ssm"),
         )
         new_state["s"], new_state["x_prev"] = s, x_last
     else:
         y, s, conv = mamba_decode(
             p["ssm"], h, cfg, policy=policy, rng=rng, name=name,
             state=state["h"], conv_cache=state["conv"],
+            prepared=pget(prepared, "ssm"),
         )
         new_state["h"], new_state["conv"] = s, conv
     x1 = x1 + y
     h = norm(x1, p["norm2"], cfg.norm)
     x1 = x1 + _ffn_forward(
-        p, h[:, None, :], cfg, policy=policy, rng=rng, name=name
+        p, h[:, None, :], cfg, policy=policy, rng=rng, name=name,
+        prepared=prepared,
     )[:, 0]
     return x1, new_state
 
 
-def block_decode(p, x1, cfg, template_idx, *, policy, rng, pos, state):
+def block_decode(p, x1, cfg, template_idx, *, policy, rng, pos, state,
+                 prepared=None):
     g = group_size(cfg)
     if g == 1:
         return _layer_decode(
             p, x1, cfg, template_idx,
-            policy=policy, rng=rng, pos=pos, state=state,
+            policy=policy, rng=rng, pos=pos, state=state, prepared=prepared,
         )
     new_states = {}
     for j in range(g):
         x1, st = _layer_decode(
             p[f"l{j}"], x1, cfg, j, policy=policy, rng=rng, pos=pos,
-            state=state[f"l{j}"],
+            state=state[f"l{j}"], prepared=pget(prepared, f"l{j}"),
         )
         new_states[f"l{j}"] = st
     return x1, new_states

@@ -6,6 +6,14 @@ cache's KV-length axis sharded over the ``model`` mesh axis =
 flash-decode).  Programming noise is *static* across decode steps
 (devices are programmed once for inference) — keys derive from layer
 names only.
+
+Weight-stationary serving (DESIGN.md §5): ``greedy_generate`` programs
+the model ONCE via :func:`repro.models.program_params` and passes the
+programmed state to every prefill/decode call, so the per-token cost is
+``prepare_input`` + the GEMM — the weight quantise/slice/noise pipeline
+drops out of the decode loop entirely.  Both step functions also accept
+``programmed`` directly for callers that manage the lifecycle
+themselves (launch.dryrun, sharded deployments).
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.layers import MemPolicy
 from repro.models import decode_step as model_decode
-from repro.models import forward
+from repro.models import forward, program_params
 from repro.models.config import ArchConfig
 from repro.models.model import DIGITAL, init_cache, segments
 
@@ -64,15 +72,21 @@ def make_prefill_step(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
 
-    def prefill_step(params, batch):
+    def prefill_step(params, batch, programmed=None):
+        from repro.models.common import dense, pget
+
         hidden, states = forward(
             params, cfg, batch, policy=policy, rng=rng, mode="prefill",
-            compute_dtype=compute_dtype, remat=remat,
+            compute_dtype=compute_dtype, remat=remat, programmed=programmed,
         )
         b = hidden.shape[0]
         s = hidden.shape[1]
-        logits = (
-            hidden[:, -1] @ params["lm_head"]["w"].astype(hidden.dtype)
+        # route the first-token logits through the same (possibly analog)
+        # lm_head the decode steps use — the whole generation then sees
+        # one consistent hardware semantics
+        logits = dense(
+            params["lm_head"], hidden[:, -1], name="lm_head", policy=policy,
+            rng=rng, prepared=pget(programmed, "lm_head"),
         ).astype(jnp.float32)
         ml = max_len or s
         cache = _cache_from_prefill(cfg, states, b, s, ml, cache_dtype)
@@ -90,10 +104,10 @@ def make_decode_step(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)
 
-    def decode_fn(params, cache, tokens):
+    def decode_fn(params, cache, tokens, programmed=None):
         return model_decode(
             params, cfg, cache, tokens, policy=policy, rng=rng,
-            compute_dtype=compute_dtype,
+            compute_dtype=compute_dtype, programmed=programmed,
         )
 
     return decode_fn
@@ -109,24 +123,44 @@ def greedy_generate(
     max_len: int | None = None,
     compute_dtype=jnp.bfloat16,
     extra_batch: dict | None = None,
+    programmed=None,
+    weight_stationary: bool = True,
+    jit_steps: bool = True,
 ):
-    """Batched greedy decoding driver (example / integration tests)."""
+    """Batched greedy decoding driver (example / integration tests).
+
+    By default the model is programmed once (``weight_stationary=True``)
+    and the prefill/decode steps are jitted, the decode step with KV-cache
+    donation so the cache updates in place across tokens.  Pass
+    ``weight_stationary=False`` to get the per-call re-programming
+    behaviour (the equivalence oracle — bitwise-identical logits under a
+    fixed programming key), or a pre-built ``programmed`` pytree to skip
+    the programming pass here.
+    """
     b, s = prompt_tokens.shape
     ml = max_len or (s + n_steps + 1)
     batch = {"tokens": prompt_tokens}
     if extra_batch:
         batch.update(extra_batch)
+    if programmed is None and weight_stationary and policy is not None:
+        # PRNGKey(0) matches the static serving key of the step makers
+        programmed = program_params(params, cfg, policy, jax.random.PRNGKey(0))
     prefill = make_prefill_step(
         cfg, policy, max_len=ml, compute_dtype=compute_dtype,
         cache_dtype=jnp.float32 if compute_dtype == jnp.float32 else jnp.bfloat16,
     )
     decode = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
-    logits, cache = prefill(params, batch)
+    if jit_steps:
+        prefill = jax.jit(prefill)
+        # donate the cache: each token's KV update aliases the previous
+        # buffer instead of allocating a fresh max_len-sized cache
+        decode = jax.jit(decode, donate_argnums=(1,))
+    logits, cache = prefill(params, batch, programmed)
     out = []
     tok = jnp.argmax(logits, axis=-1)
     for _ in range(n_steps):
         out.append(tok)
-        logits, cache = decode(params, cache, tok)
+        logits, cache = decode(params, cache, tok, programmed)
         tok = jnp.argmax(logits, axis=-1)
     out.append(tok)
     return jnp.stack(out, axis=1)

@@ -1,0 +1,201 @@
+"""Program-once weight-stationary serving (DESIGN.md §5).
+
+Contract under test:
+
+* Programming is deterministic: programming once and reusing the state
+  across decode steps is *bitwise* identical to re-programming before
+  every step with the same key (the weight-stationary claim — this
+  catches any PRNG fold-chain or state-threading mismatch between
+  ``program_params`` and the forward stack).
+* Against the legacy inline per-call graph (weight pipeline fused into
+  the forward HLO) the math is identical; XLA fuses the two different
+  programs differently so logits carry ~1-ulp fusion noise — asserted
+  tight-tolerance close, with bit-identical greedy tokens.
+* ``MemPolicy.overrides`` routing: layers resolved to ``None`` (digital)
+  get no programmed state at all.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, FoldedWeight, PreparedWeight, spec
+from repro.core.layers import MemPolicy
+from repro.models import init_params, program_params, programmed_byte_size
+from repro.serve import greedy_generate, make_decode_step, make_prefill_step
+
+INT8 = spec("int8")
+FAITHFUL = DPEConfig(
+    input_spec=INT8, weight_spec=INT8, array_size=(32, 32), mode="faithful"
+)
+FAST = DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
+
+
+def _smoke(arch):
+    return get_smoke(arch).replace(vocab=64)
+
+
+def _extra(cfg, b):
+    extra = {}
+    if cfg.encoder is not None:
+        extra["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.encoder.n_frames, cfg.d_model)
+        ).astype(jnp.float32)
+    return extra
+
+
+@pytest.mark.parametrize("mode_cfg", [FAITHFUL, FAST], ids=["faithful", "fast"])
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "whisper-tiny"])
+def test_programmed_reuse_bitmatches_reprogramming(arch, mode_cfg):
+    """noise_mode="program" with a fixed key: reusing the programmed
+    state across a decode chain == re-programming at every step,
+    bitwise, through the same jitted step functions."""
+    cfg = _smoke(arch)
+    policy = MemPolicy(default=mode_cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, **_extra(cfg, b)}
+
+    key = jax.random.PRNGKey(0)  # the serving engine's static key
+    prog = program_params(params, cfg, policy, key)
+    prefill = jax.jit(
+        make_prefill_step(
+            cfg, policy, max_len=16, compute_dtype=jnp.float32,
+            cache_dtype=jnp.float32,
+        )
+    )
+    decode = jax.jit(make_decode_step(cfg, policy, compute_dtype=jnp.float32))
+
+    logits_a, cache_a = prefill(params, batch, prog)
+    # re-program from scratch before every step (per-call semantics)
+    logits_b, cache_b = prefill(
+        params, batch, program_params(params, cfg, policy, key)
+    )
+    assert jnp.array_equal(logits_a, logits_b)
+    tok = jnp.argmax(logits_a, axis=-1)
+    for _ in range(3):
+        logits_a, cache_a = decode(params, cache_a, tok, prog)
+        logits_b, cache_b = decode(
+            params, cache_b, tok, program_params(params, cfg, policy, key)
+        )
+        assert jnp.array_equal(logits_a, logits_b)
+        tok = jnp.argmax(logits_a, axis=-1)
+
+
+@pytest.mark.parametrize("mode_cfg", [FAITHFUL, FAST], ids=["faithful", "fast"])
+def test_programmed_matches_inline_per_call(mode_cfg):
+    """Weight-stationary serving vs the legacy inline re-programming
+    graph: same math, same greedy tokens; logits equal to float-fusion
+    rounding (XLA fuses the two different HLO programs differently)."""
+    cfg = _smoke("qwen2-0.5b")
+    policy = MemPolicy(default=mode_cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    prefill = jax.jit(
+        make_prefill_step(
+            cfg, policy, max_len=16, compute_dtype=jnp.float32,
+            cache_dtype=jnp.float32,
+        )
+    )
+    decode = jax.jit(make_decode_step(cfg, policy, compute_dtype=jnp.float32))
+    l_inline, c_inline = prefill(params, {"tokens": toks})
+    l_prog, c_prog = prefill(params, {"tokens": toks}, prog)
+    scale = float(jnp.max(jnp.abs(l_inline)))
+    assert jnp.allclose(l_prog, l_inline, atol=1e-4 * max(scale, 1.0))
+    tok = jnp.argmax(l_inline, axis=-1)
+    d_inline, _ = decode(params, c_inline, tok)
+    d_prog, _ = decode(params, c_prog, tok, prog)
+    scale = float(jnp.max(jnp.abs(d_inline)))
+    assert jnp.allclose(d_prog, d_inline, atol=1e-4 * max(scale, 1.0))
+
+    gen_inline = greedy_generate(
+        params, cfg, toks, 4, policy=policy, compute_dtype=jnp.float32,
+        weight_stationary=False,
+    )
+    gen_prog = greedy_generate(
+        params, cfg, toks, 4, policy=policy, compute_dtype=jnp.float32,
+        programmed=prog,
+    )
+    assert jnp.array_equal(gen_inline, gen_prog)
+
+
+@pytest.mark.parametrize(
+    "arch", ["rwkv6-1.6b", "qwen3-moe-235b-a22b"], ids=["ssm", "moe"]
+)
+def test_programmed_families_decode_consistent(arch):
+    """SSM and MoE families: programmed greedy decode matches the inline
+    per-call decode token-for-token."""
+    cfg = _smoke(arch)
+    policy = MemPolicy(default=FAST, overrides=(("router", None),))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    gen_inline = greedy_generate(
+        params, cfg, toks, 3, policy=policy, compute_dtype=jnp.float32,
+        weight_stationary=False,
+    )
+    gen_prog = greedy_generate(
+        params, cfg, toks, 3, policy=policy, compute_dtype=jnp.float32,
+    )
+    assert jnp.array_equal(gen_inline, gen_prog)
+
+
+@pytest.mark.slow
+def test_programmed_hybrid_group_decode_consistent():
+    """Hybrid (jamba) period groups: the per-group ``l{j}`` programmed
+    subtrees thread through block_forward/block_decode correctly."""
+    cfg = _smoke("jamba-v0.1-52b")
+    policy = MemPolicy(default=FAST, overrides=(("router", None),))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    gen_inline = greedy_generate(
+        params, cfg, toks, 3, policy=policy, compute_dtype=jnp.float32,
+        weight_stationary=False,
+    )
+    gen_prog = greedy_generate(
+        params, cfg, toks, 3, policy=policy, compute_dtype=jnp.float32,
+    )
+    assert jnp.array_equal(gen_inline, gen_prog)
+
+
+def test_program_params_respects_policy_overrides():
+    """Regression: layers the policy routes to None (digital) must get no
+    PreparedWeight; faithful layers get slices, fast layers get the
+    folded effective weight."""
+    cfg = _smoke("qwen2-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = MemPolicy(
+        default=FAITHFUL,
+        overrides=(
+            (r"mlp\.", None),        # digital FFN (hybrid model, Fig. 9b)
+            (r"lm_head", FAST),      # fast-folded head
+        ),
+    )
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    seg = prog["blocks"]["seg0"]
+    # digital overrides: no programmed state at all
+    assert seg["mlp"]["wi"] is None
+    assert seg["mlp"]["wg"] is None
+    assert seg["mlp"]["wo"] is None
+    # default faithful: slices + per-block scales, stacked over the scan
+    pw = seg["attn"]["q_proj"]
+    assert isinstance(pw, PreparedWeight)
+    assert pw.slices.shape[0] == cfg.n_layers  # scan-stacked
+    assert pw.slices.shape[1] == INT8.n_slices
+    # fast override: store_dtype-compressed folded weight
+    assert isinstance(prog["lm_head"], FoldedWeight)
+    assert programmed_byte_size(prog) > 0
+
+    # a policy with no hardware layers programs nothing
+    assert program_params(params, cfg, MemPolicy(default=None)) is None
+
+
+def test_programmed_store_dtype_compression():
+    """FoldedWeight honours DPEConfig.store_dtype (bf16 resident state)."""
+    cfg = _smoke("qwen2-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = MemPolicy(default=FAST.replace(store_dtype="bf16"))
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    assert prog["lm_head"].w_eff.dtype == jnp.bfloat16
