@@ -1,0 +1,92 @@
+"""Bench regression gate: compare a fresh ``BENCH_dpe.json`` against the
+committed trajectory and fail on a large throughput regression.
+
+    python benchmarks/check_regression.py NEW.json BASELINE.json [--factor 2.5]
+
+The committed baseline is the full Table-2 shape while CI runs ``--quick``,
+so absolute µs / tok/s are NOT comparable across the two files.  The gate
+therefore checks the DIMENSIONLESS throughput ratios, which self-normalise
+over host speed and problem shape because numerator and denominator run in
+the same process on the same shape:
+
+* ``speedup_vectorized_vs_seed`` — the vectorized faithful engine vs the
+  seed slice-pair loop (the loop is kept verbatim, so a drop here means
+  the vectorized engine itself got slower).
+* ``serve_decode.speedup_programmed_vs_per_call`` — program-once
+  weight-stationary decode vs per-call re-programming (a drop means the
+  serve hot path re-acquired per-token weight-pipeline work).
+
+A check fails when ``new < baseline / factor``; the default 2.5x bound is
+deliberately loose for the noisy shared CI runner.  Both JSONs are printed
+on failure so the uploaded log is self-contained.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _get(d: dict, path: str):
+    for k in path.split("."):
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+CHECKS = (
+    ("vectorized-faithful engine", "speedup_vectorized_vs_seed"),
+    ("serve_decode programmed", "serve_decode.speedup_programmed_vs_per_call"),
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new")
+    ap.add_argument("baseline")
+    ap.add_argument("--factor", type=float, default=2.5)
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+    for label, path in CHECKS:
+        b = _get(base, path)
+        n = _get(new, path)
+        if b is None:
+            print(f"[gate] {label}: no baseline value at '{path}' — skipped")
+            continue
+        if n is None:
+            failures.append(f"{label}: '{path}' missing from {args.new}")
+            continue
+        floor = b / args.factor
+        status = "OK" if n >= floor else "REGRESSED"
+        print(
+            f"[gate] {label}: {n:.2f}x vs baseline {b:.2f}x "
+            f"(floor {floor:.2f}x) {status}"
+        )
+        if n < floor:
+            failures.append(
+                f"{label}: {n:.2f}x < {floor:.2f}x "
+                f"(baseline {b:.2f}x / {args.factor})"
+            )
+
+    if failures:
+        print("\n=== BENCH REGRESSION ===")
+        for f_ in failures:
+            print(" -", f_)
+        print(f"\n--- new ({args.new}) ---")
+        print(json.dumps(new, indent=2))
+        print(f"\n--- baseline ({args.baseline}) ---")
+        print(json.dumps(base, indent=2))
+        return 1
+    print("[gate] bench trajectory within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -409,6 +409,79 @@ def bench_serve_decode(quick=False, arch="qwen2-0.5b", policy_name="mem_faithful
     return section
 
 
+_SHARDING_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.configs import get
+from repro.distributed.sharding import programmed_sharding_rules, rules_context
+from repro.launch.dryrun import make_policy
+from repro.models import init_params, program_params, programmed_byte_size
+
+arch = %(arch)r
+cfg = get(arch)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+out = {"arch": arch, "mesh": "host2x4", "model_axis": 4}
+for mode in ("mem_fast", "mem_faithful"):
+    pol = make_policy(mode)
+    with rules_context(mesh):
+        params_abs = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0))
+        )
+        prog_abs = jax.eval_shape(
+            lambda p: program_params(p, cfg, pol, jax.random.PRNGKey(0)),
+            params_abs,
+        )
+        sh = programmed_sharding_rules(prog_abs, mesh)
+        tot = programmed_byte_size(prog_abs)
+        per = programmed_byte_size(prog_abs, sh)
+        out[mode] = {
+            "programmed_mbytes_global": round(tot / 1e6, 2),
+            "programmed_mbytes_per_device": round(per / 1e6, 2),
+            "reduction": round(tot / per, 2),
+        }
+print("RESULT " + json.dumps(out))
+"""
+
+
+def bench_programmed_sharding(arch="qwen2-0.5b"):
+    """Per-device resident programmed state under
+    ``programmed_sharding_rules`` vs replicated, on the smallest
+    multi-device mesh (2 data x 4 model).  Shape metadata only
+    (eval_shape + shard_shape — no arrays are materialised); runs in a
+    subprocess so the forced 8-device host platform never leaks into the
+    timing benchmarks of this process.  Returns the
+    ``programmed_sharding`` section of ``BENCH_dpe.json``."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDING_SCRIPT % {"arch": arch}],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    line = [
+        l for l in proc.stdout.splitlines() if l.startswith("RESULT ")
+    ][-1]
+    section = json.loads(line[len("RESULT "):])
+    for mode in ("mem_fast", "mem_faithful"):
+        _row(
+            f"programmed_sharding_{mode}", 0.0,
+            f"{section[mode]['programmed_mbytes_global']}MB->"
+            f"{section[mode]['programmed_mbytes_per_device']}MB/device "
+            f"(x{section[mode]['reduction']})",
+        )
+    return section
+
+
 ALL = [
     bench_device_model,
     bench_crossbar_solver,
@@ -447,6 +520,12 @@ def main() -> None:
         except Exception as e:  # keep the trajectory going
             _row("serve_decode", -1, f"ERROR:{type(e).__name__}:{e}")
             report["serve_decode"] = {"error": str(e)}
+        try:
+            # metadata-only (eval_shape): same cost with/without --quick
+            report["programmed_sharding"] = bench_programmed_sharding()
+        except Exception as e:  # keep the trajectory going
+            _row("programmed_sharding", -1, f"ERROR:{type(e).__name__}:{e}")
+            report["programmed_sharding"] = {"error": str(e)}
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -21,6 +21,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Programming noise must be a pure function of (key, shape) INDEPENDENT of
+# how the computation is partitioned: sharded-lowered programming
+# (DESIGN.md §6) has to sample the exact noise the replicated / per-call
+# path samples.  Legacy threefry (jax <= 0.4.x default) derandomises under
+# GSPMD — the partitioner rewrites the counter layout and the sampled
+# values change with the output sharding.  Partitionable threefry is
+# sharding-invariant and is the default on newer jax; opt in explicitly so
+# both CI matrix branches draw identical streams.
+try:  # removed flag on future jax (always partitionable there)
+    jax.config.update("jax_threefry_partitionable", True)
+except Exception:  # pragma: no cover
+    pass
+
 __all__ = [
     "slice_to_conductance",
     "conductance_to_slice",

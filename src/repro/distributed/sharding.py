@@ -27,6 +27,7 @@ __all__ = [
     "constrain",
     "logical_sharding",
     "param_sharding_rules",
+    "programmed_sharding_rules",
     "shard_map",
     "pvary",
 ]
@@ -93,11 +94,15 @@ def clear_rules() -> None:
 
 @contextlib.contextmanager
 def rules_context(mesh: Mesh, rules: dict | None = None):
+    """Activate (mesh, rules) for the block; reentrant — restores the
+    enclosing context on exit instead of clearing it."""
+    st = _ctx()
+    prev = (st.mesh, st.rules)
     set_rules(mesh, rules)
     try:
         yield
     finally:
-        clear_rules()
+        st.mesh, st.rules = prev
 
 
 def _mesh_axes(logical: str, mesh: Mesh, rules: dict):
@@ -253,6 +258,119 @@ def param_sharding_rules(params, mesh: Mesh, rules: dict | None = None):
         )
 
     return jax.tree_util.tree_map_with_path(leaf_sharding, params)
+
+
+# ---------------------------------------------------------------------------
+# Programmed-state shardings (weight-stationary serving, DESIGN.md §5/§6).
+#
+# A programmed pytree mirrors the params structure with the dense leaf dict
+# {"w": ...} replaced by a PreparedWeight / FoldedWeight node, so each node
+# inherits the partitioning of the dense weight it was programmed from —
+# with one deliberate restriction.  Axis contract:
+#
+# * The OUTPUT (N) crossbar dim takes the dense weight's logical axis
+#   (heads/ffn/vocab -> model for column-parallel projections,
+#   fsdp -> (pod, data) for row-parallel ones like o_proj / mlp.wo), and
+#   stacked expert axes shard like the dense expert stack
+#   (experts -> model); layer-scan stack axes stay local.
+# * The CONTRACTION (K) dim always stays LOCAL, even where the dense
+#   weight shards it (fsdp/ZeRO-3).  Splitting K turns each decode GEMM
+#   into partial sums + an all-reduce, which changes the float
+#   accumulation order — sharded decode would no longer be bitwise
+#   identical to replicated decode (the reuse contract,
+#   tests/test_distributed.py).  Sharding N keeps every output element's
+#   full-K dot product on exactly one device, so only data movement —
+#   never arithmetic — differs from the replicated path.
+# * The bit-slice axis of PreparedWeight.slices is always local (every
+#   device holds all Sw significances of its crossbar columns —
+#   recombination is per-element), and the sampled programming noise
+#   rides the slice values, so it shards with them (jax's partitionable
+#   threefry makes the sampled values sharding-invariant; repro enables
+#   it at import).
+#
+# The slice stack divides at ELEMENT granularity like the dense weight
+# (production N dims — 14x64 heads, 4864 ffn, 151936 vocab — divide the
+# 16-way model axis, while their 128-wide CROSSBAR-BLOCK counts often do
+# not); the per-block scale table additionally requires its block count
+# (nn) to divide, so a scale entry is sharded only when its (bk, bn)
+# tiles land on one device, and replicates otherwise (it is the small
+# O(nk*nn) table — the HBM lives in the slices).  Non-divisible dims drop
+# to replicated exactly like param_sharding_rules.
+# ---------------------------------------------------------------------------
+
+
+def _dense_logical_axes(base: str) -> tuple:
+    """Logical axes of the dense weight a programmed node came from.
+
+    ``base`` is the '/'-joined path of the PreparedWeight/FoldedWeight
+    node (e.g. "blocks/seg0/attn/q_proj").  Dense 2-D weights live at
+    ``base + "/w"``; MoE expert stacks match ``base`` directly
+    (PARAM_RULES "experts/wi" has no "/w" suffix).  The catch-all rule is
+    excluded — an unmatched node replicates via the empty tuple."""
+    for cand in (base + "/w", base):
+        for pattern, axes in PARAM_RULES[:-1]:
+            if re.search(pattern, cand):
+                return axes
+    return ()
+
+
+def programmed_sharding_rules(programmed, mesh: Mesh, rules: dict | None = None):
+    """NamedSharding pytree for a programmed-state pytree.
+
+    Accepts the output (or ``jax.eval_shape``) of
+    :func:`repro.models.programmed.program_params` and returns a matching
+    pytree of :class:`NamedSharding` usable as jit ``in_shardings`` /
+    ``out_shardings`` — the step that lets weight-stationary serving keep
+    per-device programmed HBM shrinking with the model axis instead of
+    replicating every layer's crossbar state."""
+    from repro.core.dpe import FoldedWeight, PreparedWeight
+
+    rules = dict(LOGICAL_RULES if rules is None else rules)
+
+    def lead_axes_for(stacked: tuple, lead: int) -> tuple:
+        stacked = stacked[-lead:] if lead else ()
+        return (None,) * (lead - len(stacked)) + stacked
+
+    def node_sharding(path, node):
+        axes = _dense_logical_axes(_path_str(path))
+        # K local (bitwise-reuse contract, see module comment); N inherits
+        kn = (None, axes[-1]) if len(axes) >= 2 else (None, None)
+        stacked = tuple(axes[:-2])
+        if isinstance(node, FoldedWeight):
+            # FoldedWeight is a plain (K, N) effective weight — no block
+            # structure survives folding, so divide at element granularity
+            lead = node.w_eff.ndim - 2
+            spec = logical_spec(
+                lead_axes_for(stacked, lead) + kn, mesh, rules,
+                tuple(node.w_eff.shape),
+            )
+            return FoldedWeight(w_eff=NamedSharding(mesh, spec))
+        lead = node.slices.ndim - 3  # layer-scan / expert-stack axes
+        lead_axes = lead_axes_for(stacked, lead)
+        nn = node.scale.shape[-1]
+        spec_sl = logical_spec(
+            lead_axes + (None,) + kn, mesh, rules, tuple(node.slices.shape)
+        )
+        # scale rows follow the slices' N sharding only when the shard
+        # boundary is block-aligned (nn divides); else replicate the table
+        n_ax = spec_sl[node.slices.ndim - 1]
+        if n_ax is not None:
+            size = 1
+            for m in (n_ax if isinstance(n_ax, tuple) else (n_ax,)):
+                size *= mesh.shape[m]
+            if nn % size != 0:
+                n_ax = None
+        spec_sc = P(*(tuple(spec_sl)[:lead] + (None, n_ax)))
+        return PreparedWeight(
+            slices=NamedSharding(mesh, spec_sl),
+            scale=NamedSharding(mesh, spec_sc),
+        )
+
+    return jax.tree_util.tree_map_with_path(
+        node_sharding,
+        programmed,
+        is_leaf=lambda x: isinstance(x, (PreparedWeight, FoldedWeight)),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape)
 on the production meshes and record memory/cost/roofline artifacts.
 
@@ -12,9 +9,19 @@ fails the cell.  Usage:
         --arch qwen2-0.5b --shape train_4k --mesh single --mode mem_fast
 
     PYTHONPATH=src python -m repro.launch.dryrun --all   # full matrix
+
+The production meshes are emulated with forced host-platform devices;
+``main()`` sets ``--xla_force_host_platform_device_count`` (via
+``--host-devices``, default: enough for the chosen mesh) BEFORE any jax
+backend initialisation.  Importing this module never touches device
+state, so tests and `make_policy` importers keep their real device view.
+The ``host8`` mesh is the smallest multi-device mesh (2 data x 4 model)
+— the CI smoke that catches sharding regressions without compiling a
+256-chip cell.
 """
 import argparse
 import json
+import os
 import time
 import traceback
 from pathlib import Path
@@ -31,11 +38,12 @@ from repro.distributed.sharding import (
     cache_sharding_rules,
     logical_spec,
     param_sharding_rules,
+    programmed_sharding_rules,
     replicated,
     rules_context,
 )
-from repro.launch.mesh import make_production_mesh
-from repro.models import init_params, program_params
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import init_params, program_params, programmed_byte_size
 from repro.models.model import init_cache
 from repro.optim import adafactor, adamw
 from repro.roofline.analysis import (
@@ -87,6 +95,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mode: str):
     kind, seq, batch = sh["kind"], sh["seq"], sh["batch"]
     policy = make_policy(mode)
     chips = mesh.devices.size
+    prog_bytes = None
     n_params = cfg.param_count()
     # giant models: bf16 params (f32 master lives in optimizer f32 math)
     p_dtype = jnp.bfloat16 if n_params > BF16_PARAM_THRESHOLD else jnp.float32
@@ -145,9 +154,11 @@ def lower_cell(arch: str, shape_name: str, mesh, mode: str):
                 {"tokens": tokens_abs}, mesh
             )["tokens"]
             # weight-stationary decode: program once, lower the decode
-            # step against the resident programmed state (replicated for
-            # now; sharding the programmed slices over the model axis is
-            # the next scaling step — ROADMAP)
+            # step against the resident programmed state, SHARDED over
+            # the mesh — each PreparedWeight/FoldedWeight leaf in the
+            # layout of the dense weight it was programmed from, so
+            # per-device programmed HBM shrinks with the model axis
+            # instead of replicating every layer's crossbar state
             prog_abs = jax.eval_shape(
                 lambda p: program_params(
                     p, cfg, policy, jax.random.PRNGKey(0)
@@ -163,8 +174,14 @@ def lower_cell(arch: str, shape_name: str, mesh, mode: str):
                 )
                 lowered = jitted.lower(params_abs, cache_abs, tokens_abs)
             else:
-                prog_sh = jax.tree.map(
-                    lambda _: replicated(mesh), prog_abs
+                prog_sh = programmed_sharding_rules(prog_abs, mesh)
+                prog_bytes = dict(
+                    programmed_mb_global=round(
+                        programmed_byte_size(prog_abs) / 1e6, 2
+                    ),
+                    programmed_mb_per_device=round(
+                        programmed_byte_size(prog_abs, prog_sh) / 1e6, 2
+                    ),
                 )
                 jitted = jax.jit(
                     step_fn,
@@ -176,7 +193,10 @@ def lower_cell(arch: str, shape_name: str, mesh, mode: str):
                     params_abs, cache_abs, tokens_abs, prog_abs
                 )
     mflops = model_step_flops(cfg, batch, seq, kind)
-    return lowered, dict(chips=chips, model_flops=mflops, kind=kind)
+    meta = dict(chips=chips, model_flops=mflops, kind=kind)
+    if prog_bytes is not None:
+        meta["programmed_bytes"] = prog_bytes
+    return lowered, meta
 
 
 def run_cell(arch, shape_name, mesh, mesh_name, mode, out_dir):
@@ -214,6 +234,14 @@ def run_cell(arch, shape_name, mesh, mesh_name, mode, out_dir):
             compile_s=round(t_compile, 1),
             ok=True,
         )
+        if meta.get("programmed_bytes"):
+            rec["programmed_bytes"] = meta["programmed_bytes"]
+            pb = meta["programmed_bytes"]
+            print(
+                f"       programmed state: {pb['programmed_mb_global']} MB "
+                f"global -> {pb['programmed_mb_per_device']} MB/device "
+                "(sharded)"
+            )
         print(
             f"[ok]   {arch} x {shape_name} x {mesh_name} x {mode}: "
             f"compute={report.t_compute:.4f}s memory={report.t_memory:.4f}s "
@@ -233,16 +261,45 @@ def run_cell(arch, shape_name, mesh, mesh_name, mode, out_dir):
     return rec
 
 
+# --mesh choice -> (mesh_name, factory, host devices needed).  host8 is
+# the smallest multi-device mesh — the CI sharding smoke.
+MESHES = {
+    "single": [("pod16x16", lambda: make_production_mesh(multi_pod=False), 256)],
+    "multi": [("pod2x16x16", lambda: make_production_mesh(multi_pod=True), 512)],
+    "host8": [("host2x4", lambda: make_test_mesh((2, 4)), 8)],
+}
+MESHES["both"] = MESHES["single"] + MESHES["multi"]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
-    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", default="single", choices=sorted(MESHES))
     ap.add_argument("--mode", default="mem_fast",
                     choices=["digital", "mem_fast", "mem_faithful"])
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit non-zero if any cell fails (CI gating; the default "
+        "keeps sweeping and only records failures)",
+    )
+    ap.add_argument(
+        "--host-devices", type=int, default=0,
+        help="force this many XLA host-platform devices (0 = just enough "
+        "for the chosen mesh).  Must run before jax initialises; this is "
+        "deliberately main()-only so importing the module for tests never "
+        "touches device state",
+    )
     args = ap.parse_args()
+
+    meshes = MESHES[args.mesh]
+    n_host = args.host_devices or max(n for _, _, n in meshes)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_host}"
+    ).strip()
 
     archs = (
         arch_configs.all_arch_names()
@@ -250,17 +307,20 @@ def main():
         else args.arch.split(",")
     )
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
-    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
-        args.mesh
-    ]
 
-    for multi in meshes:
-        mesh = make_production_mesh(multi_pod=multi)
-        mesh_name = "pod2x16x16" if multi else "pod16x16"
+    failed = 0
+    for mesh_name, factory, _ in meshes:
+        mesh = factory()
         print(f"=== mesh {mesh_name}: {mesh.devices.size} devices ===")
         for arch in archs:
             for shape_name in shapes:
-                run_cell(arch, shape_name, mesh, mesh_name, args.mode, args.out)
+                rec = run_cell(
+                    arch, shape_name, mesh, mesh_name, args.mode, args.out
+                )
+                if not rec.get("ok", True) and "skipped" not in rec:
+                    failed += 1
+    if args.strict and failed:
+        raise SystemExit(f"{failed} dry-run cell(s) failed")
 
 
 if __name__ == "__main__":

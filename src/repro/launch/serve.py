@@ -37,7 +37,20 @@ def main(argv=None):
     ap.add_argument("--per_call", action="store_true",
                     help="re-program every call (legacy path) instead of "
                          "programming once")
+    ap.add_argument("--shard_model", type=int, default=0,
+                    help="shard the programmed state over N local devices "
+                         "(model mesh axis, programmed_sharding_rules); "
+                         "0/1 = replicated")
     args = ap.parse_args(argv)
+    if args.shard_model > 1:
+        # must land before jax initialises its backends; only affects the
+        # host (CPU) platform — real accelerator device counts win
+        import os
+
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shard_model}"
+        ).strip()
 
     cfg = (
         arch_configs.get_smoke(args.arch)
@@ -60,20 +73,42 @@ def main(argv=None):
             jax.random.PRNGKey(3),
             (args.batch, cfg.encoder.n_frames, cfg.d_model),
         )
+    mesh = None
+    if args.shard_model > 1:
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((1, args.shard_model))
     programmed = None
     if not args.per_call and policy.enabled:
         t0 = time.time()
-        programmed = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+        sh = None
+        if mesh is not None:
+            from repro.distributed.sharding import programmed_sharding_rules
+
+            prog_abs = jax.eval_shape(
+                lambda: program_params(
+                    params, cfg, policy, jax.random.PRNGKey(0)
+                )
+            )
+            sh = programmed_sharding_rules(prog_abs, mesh)
+        programmed = program_params(
+            params, cfg, policy, jax.random.PRNGKey(0), out_shardings=sh
+        )
         jax.block_until_ready(jax.tree.leaves(programmed))
         mb = programmed_byte_size(programmed) / 1e6
         print(f"programmed {mb:.1f} MB of crossbar state in "
               f"{time.time() - t0:.2f}s")
+        if sh is not None:
+            per = programmed_byte_size(programmed, sh) / 1e6
+            print(f"sharded over {args.shard_model} devices: "
+                  f"{per:.1f} MB/device resident")
     t0 = time.time()
     out = greedy_generate(
         params, cfg, prompts, args.gen, policy=policy,
         compute_dtype=jnp.float32, extra_batch=extra or None,
         programmed=programmed,
         weight_stationary=not args.per_call,
+        mesh=mesh,
     )
     dt = time.time() - t0
     mode = "per-call" if args.per_call else "programmed"

@@ -201,8 +201,7 @@ def _prog_encdec(params, cfg, rng, policy):
     }
 
 
-@partial(jax.jit, static_argnums=(1, 2))
-def _program_params_impl(params, cfg: ArchConfig, policy: MemPolicy, rng):
+def _program_params_body(params, cfg: ArchConfig, policy: MemPolicy, rng):
     if cfg.encoder is not None:
         return _prog_encdec(params, cfg, rng, policy)
     prog = {"blocks": {}}
@@ -215,11 +214,19 @@ def _program_params_impl(params, cfg: ArchConfig, policy: MemPolicy, rng):
     return prog
 
 
+_program_params_impl = partial(jax.jit, static_argnums=(1, 2))(
+    _program_params_body
+)
+
+
 def program_params(
     params,
     cfg: ArchConfig,
     policy: MemPolicy | None,
     rng=None,
+    *,
+    out_shardings=None,
+    mesh=None,
 ):
     """Program every hardware layer of a model once (weight-stationary).
 
@@ -235,18 +242,54 @@ def program_params(
     ``(cfg, policy)`` — programming the whole model is one fused XLA
     program, and repeated calls with the same key return bit-identical
     state (the re-program-only-when-the-key-changes contract).
+
+    Mesh-aware deployments pass ``out_shardings`` (a pytree of
+    ``NamedSharding`` from
+    :func:`repro.distributed.sharding.programmed_sharding_rules`) or just
+    ``mesh`` (the rules are resolved here) so programming LOWERS sharded:
+    every leaf materialises directly in its decode-time layout instead of
+    replicate-then-reshard, and per-device programmed HBM shrinks with
+    the model axis (DESIGN.md §6).
     """
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if policy is None or not policy.enabled:
         return None
-    return _program_params_impl(params, cfg, policy, rng)
+    if out_shardings is None and mesh is not None:
+        from repro.distributed.sharding import programmed_sharding_rules
+
+        prog_abs = jax.eval_shape(
+            lambda p, r: _program_params_body(p, cfg, policy, r), params, rng
+        )
+        out_shardings = programmed_sharding_rules(prog_abs, mesh)
+    if out_shardings is None:
+        return _program_params_impl(params, cfg, policy, rng)
+    fn = jax.jit(
+        _program_params_body, static_argnums=(1, 2),
+        out_shardings=out_shardings,
+    )
+    return fn(params, cfg, policy, rng)
 
 
-def programmed_byte_size(programmed) -> int:
-    """Total bytes of resident programmed state (capacity planning)."""
+def programmed_byte_size(programmed, shardings=None) -> int:
+    """Bytes of resident programmed state (capacity planning).
+
+    Without ``shardings`` this is the global (replicated per-device)
+    footprint.  With a matching pytree of ``NamedSharding`` — e.g. from
+    :func:`repro.distributed.sharding.programmed_sharding_rules` — it is
+    the PER-DEVICE footprint: each leaf contributes its shard size, so
+    the return value is what one device actually keeps resident."""
     if programmed is None:
         return 0
-    return sum(
-        leaf.size * leaf.dtype.itemsize
-        for leaf in jax.tree_util.tree_leaves(programmed)
-    )
+    leaves = jax.tree_util.tree_leaves(programmed)
+    if shardings is None:
+        return sum(leaf.size * leaf.dtype.itemsize for leaf in leaves)
+    sh_leaves = jax.tree_util.tree_leaves(shardings)
+    assert len(sh_leaves) == len(leaves), "shardings must mirror programmed"
+    total = 0
+    for leaf, sh in zip(leaves, sh_leaves):
+        shard = sh.shard_shape(tuple(leaf.shape))
+        n = 1
+        for s in shard:
+            n *= s
+        total += n * leaf.dtype.itemsize
+    return total

@@ -14,13 +14,23 @@ programmed state to every prefill/decode call, so the per-token cost is
 drops out of the decode loop entirely.  Both step functions also accept
 ``programmed`` directly for callers that manage the lifecycle
 themselves (launch.dryrun, sharded deployments).
+
+Mesh-aware serving (DESIGN.md §6): pass ``mesh`` to ``greedy_generate``
+and the programmed state is materialised SHARDED
+(:func:`repro.distributed.sharding.programmed_sharding_rules` — each
+leaf inherits its dense weight's partitioning), so per-device programmed
+HBM shrinks with the model axis; the jitted prefill/decode steps follow
+the committed input shardings, and KV-cache donation is preserved.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.layers import MemPolicy
+from repro.distributed.sharding import rules_context
 from repro.models import decode_step as model_decode
 from repro.models import forward, program_params
 from repro.models.config import ArchConfig
@@ -126,6 +136,7 @@ def greedy_generate(
     programmed=None,
     weight_stationary: bool = True,
     jit_steps: bool = True,
+    mesh=None,
 ):
     """Batched greedy decoding driver (example / integration tests).
 
@@ -135,32 +146,43 @@ def greedy_generate(
     ``weight_stationary=False`` to get the per-call re-programming
     behaviour (the equivalence oracle — bitwise-identical logits under a
     fixed programming key), or a pre-built ``programmed`` pytree to skip
-    the programming pass here.
+    the programming pass here.  With ``mesh`` the programmed state is
+    materialised sharded over it (``programmed_sharding_rules``) instead
+    of replicated — bitwise-identical logits, per-device bytes divided by
+    the model-axis size for TP-sharded layers.
     """
     b, s = prompt_tokens.shape
     ml = max_len or (s + n_steps + 1)
     batch = {"tokens": prompt_tokens}
     if extra_batch:
         batch.update(extra_batch)
-    if programmed is None and weight_stationary and policy is not None:
-        # PRNGKey(0) matches the static serving key of the step makers
-        programmed = program_params(params, cfg, policy, jax.random.PRNGKey(0))
-    prefill = make_prefill_step(
-        cfg, policy, max_len=ml, compute_dtype=compute_dtype,
-        cache_dtype=jnp.float32 if compute_dtype == jnp.float32 else jnp.bfloat16,
-    )
-    decode = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
-    if jit_steps:
-        prefill = jax.jit(prefill)
-        # donate the cache: each token's KV update aliases the previous
-        # buffer instead of allocating a fresh max_len-sized cache
-        decode = jax.jit(decode, donate_argnums=(1,))
-    logits, cache = prefill(params, batch, programmed)
-    out = []
-    tok = jnp.argmax(logits, axis=-1)
-    for _ in range(n_steps):
-        out.append(tok)
-        logits, cache = decode(params, cache, tok, programmed)
+    # an active mesh turns on the logical-axis constraints while the
+    # steps trace, so activations follow the sharded programmed state
+    ctx = rules_context(mesh) if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        if programmed is None and weight_stationary and policy is not None:
+            # PRNGKey(0) matches the static serving key of the step makers
+            programmed = program_params(
+                params, cfg, policy, jax.random.PRNGKey(0), mesh=mesh
+            )
+        prefill = make_prefill_step(
+            cfg, policy, max_len=ml, compute_dtype=compute_dtype,
+            cache_dtype=jnp.float32
+            if compute_dtype == jnp.float32
+            else jnp.bfloat16,
+        )
+        decode = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
+        if jit_steps:
+            prefill = jax.jit(prefill)
+            # donate the cache: each token's KV update aliases the previous
+            # buffer instead of allocating a fresh max_len-sized cache
+            decode = jax.jit(decode, donate_argnums=(1,))
+        logits, cache = prefill(params, batch, programmed)
+        out = []
         tok = jnp.argmax(logits, axis=-1)
-    out.append(tok)
+        for _ in range(n_steps):
+            out.append(tok)
+            logits, cache = decode(params, cache, tok, programmed)
+            tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
     return jnp.stack(out, axis=1)

@@ -131,6 +131,188 @@ def multidevice_results():
     return json.loads(line[-1][len("RESULT "):])
 
 
+_PROG_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.configs import get_smoke
+    from repro.core import DPEConfig, spec
+    from repro.core.layers import MemPolicy
+    from repro.distributed.sharding import (
+        cache_sharding_rules, param_sharding_rules,
+        programmed_sharding_rules, replicated, rules_context,
+    )
+    from repro.models import (
+        decode_step, init_params, program_params, programmed_byte_size,
+    )
+    from repro.models.model import init_cache
+
+    out = {}
+    cfg = get_smoke("qwen2-0.5b")
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    B = 4
+
+    def run(mode):
+        # 32x32 arrays so the smoke dims span several crossbar blocks and
+        # the block-granularity divisibility check has something to shard
+        pol = MemPolicy(
+            default=DPEConfig(
+                input_spec=spec("int8"), weight_spec=spec("int8"),
+                array_size=(32, 32), mode=mode, store_dtype="bf16",
+            ),
+            overrides=(("router", None),),
+        )
+        res = {}
+        with rules_context(mesh):
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            params = jax.device_put(
+                params,
+                param_sharding_rules(jax.eval_shape(lambda: params), mesh),
+            )
+            cache = init_cache(cfg, B, 32)
+            cache_sh = cache_sharding_rules(
+                jax.eval_shape(lambda: cache), mesh
+            )
+            cache = jax.device_put(cache, cache_sh)
+            toks = jnp.zeros((B,), jnp.int32)
+            prog = program_params(params, cfg, pol, jax.random.PRNGKey(0))
+            prog_abs = jax.eval_shape(lambda: prog)
+            sh = programmed_sharding_rules(prog_abs, mesh)
+            prog_rep = jax.device_put(
+                prog, jax.tree.map(lambda _: replicated(mesh), prog_abs)
+            )
+            # same programmed values, resharded over the model axis —
+            # the decode comparison below must be BITWISE
+            prog_shd = jax.device_put(prog, sh)
+            # programming lowered sharded samples the same partitionable-
+            # threefry noise; XLA may fuse the two lowerings differently,
+            # so values agree to fusion rounding (~1 ulp) — the same
+            # tolerance as the inline-vs-programmed contract
+            # (tests/test_programmed.py, DESIGN.md paragraph 5)
+            prog_lowered = program_params(
+                params, cfg, pol, jax.random.PRNGKey(0), mesh=mesh
+            )
+            res["program_lowered_rel_diff"] = max(
+                float(
+                    jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32)))
+                    / jnp.maximum(jnp.max(jnp.abs(a.astype(jnp.float32))),
+                                  1e-30)
+                )
+                for a, b in zip(
+                    jax.tree.leaves(prog_rep), jax.tree.leaves(prog_lowered)
+                )
+            )
+            res["bytes_global"] = programmed_byte_size(prog_abs)
+            res["bytes_per_device"] = programmed_byte_size(prog_abs, sh)
+            lm_abs = jax.tree.leaves(prog_abs["lm_head"])[0]
+            lm_sh = jax.tree.leaves(sh["lm_head"])[0]
+            shard = 1
+            for s in lm_sh.shard_shape(tuple(lm_abs.shape)):
+                shard *= s
+            res["lm_head_factor"] = lm_abs.size / shard
+            step = jax.jit(
+                lambda p, c, t, g: decode_step(
+                    p, cfg, c, t, policy=pol,
+                    compute_dtype=jnp.float32, programmed=g,
+                ),
+                out_shardings=(replicated(mesh), cache_sh),
+            )
+            l_rep, _ = step(params, cache, toks, prog_rep)
+            l_shd, _ = step(params, cache, toks, prog_shd)
+            res["decode_bitwise"] = bool((l_rep == l_shd).all())
+            res["decode_max_rel_diff"] = float(
+                jnp.max(jnp.abs(l_rep - l_shd))
+                / jnp.maximum(jnp.max(jnp.abs(l_rep)), 1e-30)
+            )
+            res["decode_tokens_equal"] = bool(
+                (jnp.argmax(l_shd, -1) == jnp.argmax(l_rep, -1)).all()
+            )
+            res["finite"] = bool(jnp.isfinite(l_rep).all())
+            l_low, _ = step(params, cache, toks, prog_lowered)
+            res["lowered_tokens_equal"] = bool(
+                (jnp.argmax(l_low, -1) == jnp.argmax(l_rep, -1)).all()
+            )
+        return res
+
+    out["fast"] = run("fast")
+    out["faithful"] = run("faithful")
+    print("RESULT " + json.dumps(out))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def programmed_sharding_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROG_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_sharded_programmed_decode_bitwise(programmed_sharding_results):
+    """Decode against model-axis-sharded programmed state equals the
+    replicated-programmed decode BITWISE on the serving-default fast
+    path (the reuse contract: sharding moves data, never arithmetic —
+    the K axis of every programmed leaf stays local so no dot product is
+    ever split)."""
+    res = programmed_sharding_results["fast"]
+    assert res["finite"]
+    assert res["decode_bitwise"]
+
+
+def test_sharded_programmed_decode_faithful(programmed_sharding_results):
+    """The faithful slice-pair engine under a sharded batch axis picks
+    different CPU GEMM micro-kernels for different local M extents
+    (replicated weights gather the batch, sharded weights keep it
+    local), so logits agree to GEMM-kernel rounding rather than
+    bitwise; greedy tokens must be unchanged."""
+    res = programmed_sharding_results["faithful"]
+    assert res["finite"]
+    assert res["decode_max_rel_diff"] < 2e-5
+    assert res["decode_tokens_equal"]
+
+
+@pytest.mark.parametrize("mode", ["fast", "faithful"])
+def test_sharded_programming_matches_replicated(
+    programmed_sharding_results, mode
+):
+    """program_params(out_shardings=...) lowers sharded but samples the
+    exact same programming noise (partitionable threefry); remaining
+    drift is XLA fusion rounding (~1 ulp, same tolerance as the
+    inline-vs-programmed contract) and greedy tokens are unchanged."""
+    res = programmed_sharding_results[mode]
+    assert res["program_lowered_rel_diff"] < 1e-5
+    assert res["lowered_tokens_equal"]
+
+
+@pytest.mark.parametrize("mode", ["fast", "faithful"])
+def test_sharded_programmed_bytes_shrink(programmed_sharding_results, mode):
+    """Per-device programmed bytes shrink ~linearly with the model axis:
+    column(model)-sharded leaves (lm_head) divide exactly by the 4-way
+    model axis; the whole tree (row-parallel layers shard over data=2)
+    still shrinks by >2.5x on the 2x4 mesh."""
+    res = programmed_sharding_results[mode]
+    assert res["lm_head_factor"] == 4.0
+    assert res["bytes_global"] / res["bytes_per_device"] > 2.5
+
+
 def test_sharded_train_step_runs(multidevice_results):
     losses = multidevice_results["losses"]
     assert len(losses) == 3 and all(l > 0 and l < 50 for l in losses)
