@@ -15,6 +15,10 @@ the same process on the same shape:
 * ``serve_decode.speedup_programmed_vs_per_call`` — program-once
   weight-stationary decode vs per-call re-programming (a drop means the
   serve hot path re-acquired per-token weight-pipeline work).
+* ``serve_batching.scaling_max_slots_vs_1`` — continuous-batching
+  aggregate decode tok/s at the widest slot count vs a single slot (a
+  drop means slot-parallel decode stopped amortising the shared
+  programmed state).
 
 A check fails when ``new < baseline / factor``; the default 2.5x bound is
 deliberately loose for the noisy shared CI runner.  Both JSONs are printed
@@ -38,6 +42,10 @@ def _get(d: dict, path: str):
 CHECKS = (
     ("vectorized-faithful engine", "speedup_vectorized_vs_seed"),
     ("serve_decode programmed", "serve_decode.speedup_programmed_vs_per_call"),
+    # continuous batching: aggregate decode tok/s at the widest slot
+    # count vs 1 slot — a drop means slot-parallel decode stopped
+    # amortising the shared programmed state (serve/batching.py)
+    ("serve_batching scaling", "serve_batching.scaling_max_slots_vs_1"),
 )
 
 

@@ -1,0 +1,60 @@
+"""Continuous batching over program-once crossbar state (DESIGN.md §7).
+
+Streams a handful of variable-length requests through the ServeLoop slot
+table — one shared programmed pytree serves every request — and then
+verifies the engine's core promise: each request's tokens are exactly
+what solo greedy decoding produces for that prompt alone.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, spec
+from repro.core.layers import MemPolicy
+from repro.models import init_params
+from repro.serve import Request, ServeLoop, greedy_generate
+
+
+def main():
+    cfg = get_smoke("qwen2-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = MemPolicy(
+        default=DPEConfig(
+            input_spec=spec("int8"), weight_spec=spec("int8"), mode="fast"
+        )
+    )
+    rng = np.random.default_rng(0)
+    lens = [5, 11, 3, 8, 14, 6]
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32) for l in lens
+    ]
+    loop = ServeLoop(
+        params, cfg, policy=policy, slots=3, max_len=48,
+        compute_dtype=jnp.float32,
+    )
+    report = loop.run(
+        [Request(rid=i, tokens=p, max_new_tokens=12)
+         for i, p in enumerate(prompts)]
+    )
+    print(
+        f"served {len(prompts)} requests through 3 slots: "
+        f"{report.tok_per_s:.0f} tok/s, occupancy {report.occupancy:.2f}"
+    )
+    for res in report.results[:2]:
+        solo = greedy_generate(
+            params, cfg, jnp.asarray(prompts[res.rid])[None], 11,
+            policy=policy, compute_dtype=jnp.float32,
+            programmed=loop.programmed, max_len=48,
+        )
+        match = res.tokens == list(np.asarray(solo[0]))
+        print(
+            f"request {res.rid} (prompt len {res.prompt_len}): "
+            f"{res.tokens[:8]}... batched == solo: {match}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ convolutions become one matrix multiplication; the complex kernel's real
 and imaginary parts are quantised to signed INT4 and mapped separately
 (Fig. 14c); the power spectrum integrates both branches (Fig. 14d).
 
-Offline substitution (DESIGN.md §7): the El-Niño NINO3 series is
+Offline substitution (DESIGN.md §8): the El-Niño NINO3 series is
 replaced by a synthetic multi-scale signal (two chirping tones + noise);
 the validated claim — hardware CWT power spectrum matches the ideal one
 — is data-independent.

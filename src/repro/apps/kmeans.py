@@ -7,7 +7,7 @@ the crossbar via the dot-product expansion of [21]:
 with n = 10 tail elements (paper's setting).  Data precision INT8 with
 slice method (1,1,2,4); one centre updated per iteration (paper).
 
-Offline substitution (DESIGN.md §7): IRIS is replaced by a statistically
+Offline substitution (DESIGN.md §8): IRIS is replaced by a statistically
 matched synthetic 3-cluster, 4-feature, 150-sample set (two clusters
 overlapping, like versicolor/virginica).  The validated claim — hardware
 clustering assignments match full-precision clustering — is

@@ -2,7 +2,7 @@
 
 LeNet-5-on-MNIST is substituted by a LeNet-style conv net on a
 deterministic synthetic digit dataset (procedural 12x12 glyph templates
-+ noise — DESIGN.md §7); the validated claims are relative:
++ noise — DESIGN.md §8); the validated claims are relative:
 
   * INT4 (1,1,2) training is unstable / underperforms,
   * INT8 (1,1,2,4) and FP16 (1,1,2,4,4) train close to full precision,

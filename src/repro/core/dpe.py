@@ -236,6 +236,12 @@ def _faithful_matmul(
             ymax = jnp.max(
                 jnp.max(p, axis=4, keepdims=True), axis=1, keepdims=True
             )
+        elif cfg.adc_mode == "dynamic_row":
+            # per-INPUT-VECTOR range: each row of M is a separate analog
+            # read in real hardware, so its tracked ADC range must not
+            # see the other rows — the row-independence contract that
+            # continuous batching relies on (DESIGN.md §7).
+            ymax = jnp.max(p, axis=4, keepdims=True)
         else:
             ymax = ymax_fs
         # adc_quantize (round(p/step)*step) with the *step and the pair
@@ -279,6 +285,8 @@ def _faithful_matmul_loop(
                 if cfg.radc > 1:
                     if cfg.adc_mode == "dynamic":
                         ymax = jnp.max(p, axis=(0, 2), keepdims=True)
+                    elif cfg.adc_mode == "dynamic_row":
+                        ymax = jnp.max(p, axis=2, keepdims=True)
                     else:
                         ymax = jnp.float32(
                             _adc_fullscale(
@@ -472,7 +480,11 @@ def resolve_backend(cfg: DPEConfig) -> str:
     """
     if cfg.backend != "auto":
         return cfg.backend
-    if cfg.mode == "faithful" and jax.default_backend() == "tpu":
+    if (
+        cfg.mode == "faithful"
+        and cfg.adc_mode != "dynamic_row"  # kernel ranges per bm-tile
+        and jax.default_backend() == "tpu"
+    ):
         return "pallas"
     return "xla"
 

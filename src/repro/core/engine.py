@@ -42,8 +42,16 @@ class DPEConfig:
     #             folded before a single GEMM; exact when ADC is ideal.
     # "digital":  plain matmul (software baseline).
     mode: str = "faithful"
-    # "dynamic": ADC range = per-block max (paper's register-held
-    #            coefficients); "fullscale": fixed physical full-scale.
+    # "dynamic": ADC range = per-block max over the whole input batch
+    #            (paper's register-held coefficients; couples the rows of
+    #            one simulated call);
+    # "dynamic_row": per-block max PER INPUT VECTOR — physically each
+    #            input vector is a separate analog read, so the tracked
+    #            range never couples unrelated rows.  This is the serving
+    #            default: a request's numbers are identical whether it is
+    #            decoded alone or batched next to strangers
+    #            (serve/batching.py equivalence contract, DESIGN.md §7);
+    # "fullscale": fixed physical full-scale (also row-independent).
     adc_mode: str = "dynamic"
     # "program": fresh log-normal programming noise per weight update
     #            (training re-programs every step); "off": ideal devices.
@@ -64,7 +72,7 @@ class DPEConfig:
     def __post_init__(self):
         if self.mode not in ("faithful", "fast", "digital"):
             raise ValueError(f"bad mode {self.mode!r}")
-        if self.adc_mode not in ("dynamic", "fullscale"):
+        if self.adc_mode not in ("dynamic", "dynamic_row", "fullscale"):
             raise ValueError(f"bad adc_mode {self.adc_mode!r}")
         if self.noise_mode not in ("program", "off"):
             raise ValueError(f"bad noise_mode {self.noise_mode!r}")
@@ -85,6 +93,17 @@ class DPEConfig:
     @property
     def cv(self) -> float:
         return 0.0 if self.noise_mode == "off" else self.var
+
+    @property
+    def row_independent(self) -> bool:
+        """True when one input row's output never depends on the other
+        rows of the same simulated call.  Quantisation scales are per-row
+        in every mode; the only batch coupling in the whole pipeline is
+        the ``"dynamic"`` ADC range (max over the batch axis).  Continuous
+        batching (serve/batching.py) requires row-independent numerics so
+        a request decodes identically alone or packed next to strangers.
+        """
+        return self.mode != "faithful" or self.adc_mode != "dynamic"
 
     def replace(self, **kw) -> "DPEConfig":
         return replace(self, **kw)

@@ -36,6 +36,14 @@ def sliced_matmul(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Faithful DPE matmul via the Pallas kernel (M auto-padded)."""
+    if adc_mode == "dynamic_row":
+        # the kernel's dynamic range is per bm-row-tile; per-row ranging
+        # (the serving/batching contract) is only lowered by the XLA
+        # engine — resolve_backend never routes it here
+        raise ValueError(
+            "adc_mode='dynamic_row' is not supported by the pallas "
+            "kernel; use backend='xla' (or 'auto')"
+        )
     if interpret is None:
         interpret = _auto_interpret()
     sxn, m, kp = xs.shape

@@ -10,6 +10,16 @@ measuring what program-once buys:
     PYTHONPATH=src python -m repro.launch.serve \
         --arch rwkv6-1.6b --smoke --batch 4 --prompt_len 16 --gen 16 \
         --policy mem_fast
+
+With ``--requests N`` the driver switches to the continuous-batching
+engine (``serve/batching.py``, DESIGN.md §7): N variable-length requests
+stream through a ``--slots K`` slot table against ONE shared programmed
+state, optionally with Poisson arrivals, and the report adds per-request
+latency percentiles:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --smoke --policy mem_fast --requests 8 --slots 4 \
+        --arrival poisson --rate 20
 """
 from __future__ import annotations
 
@@ -18,11 +28,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as arch_configs
 from repro.launch.dryrun import make_policy
 from repro.models import init_params, program_params, programmed_byte_size
-from repro.serve import greedy_generate
+from repro.serve import Request, ServeLoop, greedy_generate
 
 
 def main(argv=None):
@@ -41,6 +52,22 @@ def main(argv=None):
                     help="shard the programmed state over N local devices "
                          "(model mesh axis, programmed_sharding_rules); "
                          "0/1 = replicated")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N variable-length requests through the "
+                         "continuous-batching engine instead of one "
+                         "lockstep batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot count of the continuous-batching "
+                         "engine")
+    ap.add_argument("--arrival", default="all",
+                    choices=["all", "poisson"],
+                    help="request arrival process: all at t=0, or Poisson "
+                         "with --rate")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--max_len", type=int, default=0,
+                    help="KV arena length per slot (0 = fitted to the "
+                         "workload)")
     args = ap.parse_args(argv)
     if args.shard_model > 1:
         # must land before jax initialises its backends; only affects the
@@ -58,6 +85,8 @@ def main(argv=None):
         else arch_configs.get(args.arch)
     )
     policy = make_policy(args.policy)
+    if args.requests:
+        policy = _row_independent(policy)
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
@@ -102,6 +131,8 @@ def main(argv=None):
             per = programmed_byte_size(programmed, sh) / 1e6
             print(f"sharded over {args.shard_model} devices: "
                   f"{per:.1f} MB/device resident")
+    if args.requests:
+        return _serve_continuous(args, cfg, policy, params, programmed, mesh)
     t0 = time.time()
     out = greedy_generate(
         params, cfg, prompts, args.gen, policy=policy,
@@ -116,6 +147,81 @@ def main(argv=None):
           f"({args.batch*args.gen/dt:.1f} tok/s, {mode})")
     print("sample:", out[0][:16].tolist())
     return out
+
+
+def _row_independent(policy):
+    """Continuous batching requires row-independent numerics: remap any
+    faithful batch-coupled ``adc_mode="dynamic"`` config to
+    ``"dynamic_row"`` (per-analog-read ranging — the serving semantics,
+    DESIGN.md §7) before the model is programmed."""
+    from dataclasses import replace as dc_replace
+
+    def fix(c):
+        if c is not None and not c.row_independent:
+            print(f"[serve] {c.mode} adc_mode=dynamic -> dynamic_row "
+                  "(continuous batching needs row-independent numerics)")
+            return c.replace(adc_mode="dynamic_row")
+        return c
+
+    return dc_replace(
+        policy,
+        default=fix(policy.default),
+        overrides=tuple((pat, fix(c)) for pat, c in policy.overrides),
+    )
+
+
+def _serve_continuous(args, cfg, policy, params, programmed, mesh):
+    """Continuous-batching mode: N variable-length requests through a
+    K-slot table over one shared programmed state (DESIGN.md §7)."""
+    rng = np.random.default_rng(0)
+    lens = rng.integers(
+        max(1, args.prompt_len // 2), args.prompt_len + 1,
+        size=args.requests,
+    )
+    arrivals = np.zeros(args.requests)
+    if args.arrival == "poisson":
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.rate, size=args.requests)
+        )
+    max_len = args.max_len or int(lens.max() + args.gen + 1)
+    loop = ServeLoop(
+        params, cfg, policy=policy, slots=args.slots, max_len=max_len,
+        compute_dtype=jnp.float32, programmed=programmed,
+        weight_stationary=not args.per_call, mesh=mesh,
+    )
+    reqs = [
+        Request(
+            rid=i,
+            tokens=rng.integers(0, cfg.vocab, size=int(lens[i])).astype(
+                np.int32
+            ),
+            max_new_tokens=args.gen,
+            submit_time=float(arrivals[i]),
+        )
+        for i in range(args.requests)
+    ]
+    # warmup pass (same buckets/slots) so the report reflects the
+    # steady-state engine, not jit compiles
+    loop.run([
+        Request(rid=-1 - r.rid, tokens=r.tokens, max_new_tokens=2)
+        for r in reqs
+    ])
+    report = loop.run(reqs)
+    mode = "per-call" if args.per_call else "programmed"
+    print(
+        f"served {args.requests} requests through {args.slots} slots in "
+        f"{report.wall_s:.2f}s: {report.tok_per_s:.1f} tok/s aggregate "
+        f"({report.decode_steps} decode steps, "
+        f"occupancy {report.occupancy:.2f}, {mode})"
+    )
+    lat = report.latency_percentiles()
+    print(
+        "per-request latency s: "
+        f"mean={lat['mean']:.3f} p50={lat['p50']:.3f} "
+        f"p95={lat['p95']:.3f} max={lat['max']:.3f}"
+    )
+    print("sample:", report.results[0].tokens[:16])
+    return report
 
 
 if __name__ == "__main__":

@@ -302,7 +302,7 @@ def attention_block(
 
 def decode_attention_block(
     p, x1, cfg, *, policy, rng, cache_k, cache_v, pos, name, cross=False,
-    prepared=None,
+    prepared=None, active=None,
 ):
     """One-token attention block against the cache.
 
@@ -310,6 +310,11 @@ def decode_attention_block(
     pos: (B,) index of the new token.  Returns (y, new_k1, new_v1) where
     new_k1/v1 are this token's K/V (caller scatters into the cache) —
     for cross-attention they are None.
+
+    ``active``: optional (B,) bool — rows where it is False write their
+    OLD cache values back at ``pos`` instead of this token's K/V, so an
+    idle serving slot never mutates the shared KV arena
+    (serve/batching.py; the caller also freezes the row's ``pos``).
     """
     b, d = x1.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -333,12 +338,25 @@ def decode_attention_block(
             q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
             k1 = apply_rope(k1[:, None], cos[:, None], sin[:, None])[:, 0]
         new_k1, new_v1 = k1, v1
+        k1c = k1.astype(cache_k.dtype)
+        v1c = v1.astype(cache_v.dtype)
+        if active is not None:
+            # inactive slots re-write the value already stored at pos —
+            # the update is a per-row no-op and the arena stays intact
+            take = jax.vmap(
+                lambda c, i: lax.dynamic_slice(
+                    c, (i, 0, 0), (1,) + c.shape[1:]
+                )[0]
+            )
+            sel = active[:, None, None]
+            k1c = jnp.where(sel, k1c, take(cache_k, pos))
+            v1c = jnp.where(sel, v1c, take(cache_v, pos))
         cache_k = jax.vmap(
             lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
-        )(cache_k, k1.astype(cache_k.dtype), pos)
+        )(cache_k, k1c, pos)
         cache_v = jax.vmap(
             lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
-        )(cache_v, v1.astype(cache_v.dtype), pos)
+        )(cache_v, v1c, pos)
     out = attention_decode(
         q, cache_k, cache_v, pos, window=cfg.swa_window if not cross else 0
     )

@@ -344,20 +344,29 @@ def decode_step(
     rng=None,
     compute_dtype=jnp.bfloat16,
     programmed=None,
+    active=None,
 ):
     """One serving step: consume `tokens`, return (logits (B,V), cache).
 
     With ``programmed`` state the decode hot path never re-runs the
-    weight pipeline — each token pays prepare_input + the GEMM only."""
+    weight pipeline — each token pays prepare_input + the GEMM only.
+
+    ``active``: optional (B,) bool slot mask (continuous batching,
+    serve/batching.py): rows where it is False neither advance ``pos``
+    nor mutate their KV / recurrent state — an idle slot's row is
+    completely frozen while its neighbours keep decoding.  Logits are
+    still produced for every row; callers ignore the inactive ones."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if cfg.encoder is not None:
         return _encdec_decode(
             params, cfg, cache, tokens, policy=policy, rng=rng,
             compute_dtype=compute_dtype, programmed=programmed,
+            active=active,
         )
     x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
     pos = cache["pos"]
-    new_cache = {"pos": pos + 1, "blocks": {}}
+    inc = 1 if active is None else active.astype(jnp.int32)
+    new_cache = {"pos": pos + inc, "blocks": {}}
     prog_blocks = pget(programmed, "blocks")
     for si, (start, steps, tmpl) in enumerate(segments(cfg)):
         seg_p = params["blocks"][f"seg{si}"]
@@ -370,7 +379,7 @@ def decode_step(
             rng_l = jax.random.fold_in(rng_s, idx)
             x1, st = block_decode(
                 p_l, x1, cfg, tmpl, policy=policy, rng=rng_l, pos=pos,
-                state=c_l, prepared=prog_l,
+                state=c_l, prepared=prog_l, active=active,
             )
             return x1, st
 
@@ -484,12 +493,13 @@ def _encdec_forward(
 
 
 def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype,
-                   programmed=None):
+                   programmed=None, active=None):
     d = cfg.d_model
     x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
     pos = cache["pos"]
     x1 = x1 + _sinusoid(pos, d).astype(compute_dtype)
-    new_cache = {"pos": pos + 1, "blocks": {}, "cross_kv": cache["cross_kv"]}
+    inc = 1 if active is None else active.astype(jnp.int32)
+    new_cache = {"pos": pos + inc, "blocks": {}, "cross_kv": cache["cross_kv"]}
     seg_p = params["blocks"]["seg0"]
     seg_c = cache["blocks"]["seg0"]
     prog_seg0 = pget(pget(programmed, "blocks"), "seg0")
@@ -501,7 +511,7 @@ def _encdec_decode(params, cfg, cache, tokens, *, policy, rng, compute_dtype,
         rng_l = jax.random.fold_in(rng, idx)
         x1, st = block_decode(
             p_l, x1, cfg, 0, policy=policy, rng=rng_l, pos=pos, state=c_l,
-            prepared=prog_l,
+            prepared=prog_l, active=active,
         )
         h = norm(x1, p_x["norm"], cfg.norm)
         enc_pos = jnp.full_like(pos, fr - 1)

@@ -193,8 +193,17 @@ def block_forward(p, x, cfg, template_idx, *, policy, rng, positions,
     return x, states
 
 
+def _freeze_inactive(active, new, old):
+    """Keep ``old`` state on rows where ``active`` is False (idle serving
+    slots must not evolve their recurrent state — serve/batching.py)."""
+    if active is None:
+        return new
+    sel = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(sel, new, old)
+
+
 def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
-                  prepared=None):
+                  prepared=None, active=None):
     kind, _ = cfg.layer_kind(layer_idx)
     name = f"L.{kind}"
     h = norm(x1, p["norm1"], cfg.norm)
@@ -203,7 +212,7 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
         y, ck, cv = decode_attention_block(
             p["attn"], h, cfg, policy=policy, rng=rng,
             cache_k=state["k"], cache_v=state["v"], pos=pos, name=name,
-            prepared=pget(prepared, "attn"),
+            prepared=pget(prepared, "attn"), active=active,
         )
         new_state["k"], new_state["v"] = ck, cv
     elif cfg.ssm.kind == "rwkv6":
@@ -212,14 +221,16 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
             state=state["s"], x_prev=state["x_prev"],
             prepared=pget(prepared, "ssm"),
         )
-        new_state["s"], new_state["x_prev"] = s, x_last
+        new_state["s"] = _freeze_inactive(active, s, state["s"])
+        new_state["x_prev"] = _freeze_inactive(active, x_last, state["x_prev"])
     else:
         y, s, conv = mamba_decode(
             p["ssm"], h, cfg, policy=policy, rng=rng, name=name,
             state=state["h"], conv_cache=state["conv"],
             prepared=pget(prepared, "ssm"),
         )
-        new_state["h"], new_state["conv"] = s, conv
+        new_state["h"] = _freeze_inactive(active, s, state["h"])
+        new_state["conv"] = _freeze_inactive(active, conv, state["conv"])
     x1 = x1 + y
     h = norm(x1, p["norm2"], cfg.norm)
     x1 = x1 + _ffn_forward(
@@ -230,18 +241,20 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
 
 
 def block_decode(p, x1, cfg, template_idx, *, policy, rng, pos, state,
-                 prepared=None):
+                 prepared=None, active=None):
     g = group_size(cfg)
     if g == 1:
         return _layer_decode(
             p, x1, cfg, template_idx,
             policy=policy, rng=rng, pos=pos, state=state, prepared=prepared,
+            active=active,
         )
     new_states = {}
     for j in range(g):
         x1, st = _layer_decode(
             p[f"l{j}"], x1, cfg, j, policy=policy, rng=rng, pos=pos,
             state=state[f"l{j}"], prepared=pget(prepared, f"l{j}"),
+            active=active,
         )
         new_states[f"l{j}"] = st
     return x1, new_states

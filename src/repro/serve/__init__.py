@@ -1,3 +1,27 @@
-from .engine import make_prefill_step, make_decode_step, greedy_generate
+from .batching import (
+    Request,
+    RequestQueue,
+    RequestResult,
+    ServeLoop,
+    ServeReport,
+    default_buckets,
+)
+from .engine import (
+    greedy_generate,
+    make_decode_step,
+    make_prefill_step,
+    make_slot_prefill,
+)
 
-__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+__all__ = [
+    "make_prefill_step",
+    "make_slot_prefill",
+    "make_decode_step",
+    "greedy_generate",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "ServeLoop",
+    "ServeReport",
+    "default_buckets",
+]

@@ -1,0 +1,479 @@
+"""Continuous-batching serving engine over program-once crossbar state.
+
+MemIntelli's inference semantics are weight-stationary: crossbars are
+programmed once and reused for many analog matmuls.  ``greedy_generate``
+amortises the programmed state over ONE fixed batch decoded in lockstep;
+this module amortises it over a *stream* of requests (DESIGN.md §7):
+
+* :class:`RequestQueue` holds submitted :class:`Request`\\ s (FIFO among
+  the ones whose arrival time has passed).
+* :class:`ServeLoop` owns a fixed table of ``slots`` decode lanes backed
+  by one preallocated KV arena (``slots x max_len``, donated across
+  steps) and ONE shared programmed pytree (replicated or mesh-sharded).
+  Each iteration admits requests into free slots (bucket-padded prefill
+  → scatter into the slot, no recompile per prompt length), runs one
+  jitted slot-parallel decode step with per-slot positions / length
+  masks / active flags, and retires finished sequences per slot (EOS or
+  max-token), immediately refilling from the queue.
+
+Equivalence contract (tests/test_batching.py): a request decoded through
+this engine emits exactly the tokens ``greedy_generate`` emits for it
+alone, because every per-row computation in the decode graph is
+independent of the other rows — per-row input quantisation, per-row
+(``dynamic_row``/``fullscale``) ADC ranging, per-slot masked attention
+over the arena, and GEMM rows that never mix.  On the fast engine the
+per-step logits are bitwise identical across packings; the faithful
+engine agrees to GEMM-kernel rounding (different batch extents pick
+different CPU micro-kernels) with tokens equal.  Batch-coupled numerics
+(faithful ``adc_mode="dynamic"``, which ranges its ADC over the whole
+batch) are rejected at construction unless explicitly allowed.
+"""
+from __future__ import annotations
+
+import contextlib
+import heapq
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.layers import MemPolicy
+from repro.distributed.sharding import rules_context
+from repro.models import program_params
+from repro.models.model import init_cache
+
+from .engine import make_decode_step, make_slot_prefill
+
+__all__ = [
+    "Request",
+    "RequestResult",
+    "RequestQueue",
+    "ServeLoop",
+    "ServeReport",
+    "default_buckets",
+]
+
+
+# ---------------------------------------------------------------------------
+# requests and results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``max_new_tokens`` counts every emitted token including the one
+    derived from the prefill logits (so it matches
+    ``greedy_generate(..., n_steps=max_new_tokens - 1)``).
+    ``submit_time`` is seconds relative to ``ServeLoop.run`` start; the
+    request is not admitted before it (Poisson replay in launch.serve).
+    """
+
+    rid: int
+    tokens: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    eos_id: int | None = None
+    submit_time: float = 0.0
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    finish_reason: str  # "eos" | "length"
+    submit_time: float
+    admit_time: float
+    finish_time: float
+    decode_steps: int
+    logits: list[np.ndarray] | None = None  # only when collect_logits
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.submit_time
+
+
+@dataclass
+class ServeReport:
+    results: list[RequestResult]
+    wall_s: float
+    decode_steps: int
+    generated_tokens: int
+    occupancy: float  # mean active slots per decode step / total slots
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def latency_percentiles(self) -> dict:
+        lats = sorted(r.latency_s for r in self.results)
+        if not lats:
+            return {}
+        pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
+        return {
+            "mean": sum(lats) / len(lats),
+            "p50": pick(0.50),
+            "p95": pick(0.95),
+            "max": lats[-1],
+        }
+
+
+class RequestQueue:
+    """Arrival-ordered FIFO: pops the earliest-submitted request whose
+    ``submit_time`` has passed."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def submit(self, request: Request) -> None:
+        heapq.heappush(
+            self._heap, (request.submit_time, self._seq, request)
+        )
+        self._seq += 1
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def next_arrival(self) -> float | None:
+        return self._heap[0][0] if self._heap else None
+
+    def pop_ready(self, now: float) -> Request | None:
+        if self._heap and self._heap[0][0] <= now:
+            return heapq.heappop(self._heap)[2]
+        return None
+
+
+# ---------------------------------------------------------------------------
+# jitted step cache — shared across ServeLoop instances so repeated
+# construction (tests, sweeps over slot counts) never re-jits; shape
+# specialisation per (slots, bucket) is jax's own cache.
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _jit_prefill(cfg, policy, compute_dtype, cache_dtype, mesh):
+    fn = make_slot_prefill(
+        cfg, policy, compute_dtype=compute_dtype, cache_dtype=cache_dtype
+    )
+    return jax.jit(fn)
+
+
+@lru_cache(maxsize=None)
+def _jit_decode(cfg, policy, compute_dtype, mesh):
+    fn = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
+
+    def step(params, cache, tokens, programmed, active):
+        logits, cache = fn(params, cache, tokens, programmed, active)
+        return logits, jnp.argmax(logits, axis=-1), cache
+
+    # donate the arena: each step's KV writes alias the previous buffer
+    return jax.jit(step, donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _jit_pack(cfg):
+    def pack(cache, states, slot, prompt_len):
+        """Scatter one prefilled request into arena slot ``slot``.
+
+        ``states`` leaves are (steps, 1, bucket, ...) — written at
+        [:, slot, :bucket]; positions in (prompt_len, max_len) keep
+        whatever the slot held before, which the per-slot length mask
+        (`ki <= pos`) makes exactly invisible until decode overwrites
+        them one token at a time.
+        """
+
+        def put(c, s):
+            idx = (0, slot) + (0,) * (c.ndim - 2)
+            return lax.dynamic_update_slice(c, s.astype(c.dtype), idx)
+
+        blocks = jax.tree.map(put, cache["blocks"], states)
+        pos = lax.dynamic_update_slice(
+            cache["pos"], prompt_len[None].astype(jnp.int32), (slot,)
+        )
+        return {"pos": pos, "blocks": blocks}
+
+    return jax.jit(pack, donate_argnums=(0,))
+
+
+def default_buckets(max_len: int) -> tuple[int, ...]:
+    """Prompt-length pad buckets: powers of two capped at ``max_len``."""
+    out = []
+    b = 8
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# the serving loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _SlotState:
+    request: Request
+    admit_time: float
+    out: list = field(default_factory=list)
+    logits: list | None = None
+    decode_steps: int = 0
+    finish_reason: str | None = None
+
+
+class ServeLoop:
+    """Continuous-batching greedy decoding against shared programmed state.
+
+    Supports every all-attention decoder family (dense / MoE — per-row
+    routing keeps MoE dispatch request-local).  Recurrent-state families
+    (ssm / hybrid) need exact-length prefill (right-padding would pollute
+    the carried state) and encoder-decoder / VLM families need per-request
+    side inputs — both raise ``NotImplementedError`` for now.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg,
+        *,
+        policy: MemPolicy | None = None,
+        slots: int = 4,
+        max_len: int = 256,
+        buckets: tuple[int, ...] | None = None,
+        compute_dtype=jnp.bfloat16,
+        programmed=None,
+        weight_stationary: bool = True,
+        mesh=None,
+        collect_logits: bool = False,
+        allow_coupled_numerics: bool = False,
+    ):
+        if cfg.encoder is not None or cfg.vision_prefix:
+            raise NotImplementedError(
+                "continuous batching needs per-request side inputs for "
+                f"{cfg.family} models"
+            )
+        kinds = {cfg.layer_kind(i)[0] for i in range(cfg.n_layers)}
+        if kinds != {"attn"}:
+            raise NotImplementedError(
+                "continuous batching requires all-attention layers "
+                f"(got {sorted(kinds)}): recurrent state cannot be "
+                "prefilled with right-padded prompts"
+            )
+        self.policy = policy or MemPolicy(default=None)
+        if not allow_coupled_numerics:
+            coupled = [
+                pat
+                for pat, c in (("default", self.policy.default),)
+                + tuple(self.policy.overrides)
+                if c is not None and not c.row_independent
+            ]
+            if coupled:
+                raise ValueError(
+                    "policy couples batch rows through the ADC range "
+                    f"(faithful adc_mode='dynamic' at {coupled}): a "
+                    "request would decode differently next to strangers. "
+                    "Use adc_mode='dynamic_row' (per-read ranging) or "
+                    "'fullscale', or pass allow_coupled_numerics=True."
+                )
+        self.params = params
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.buckets = tuple(sorted(buckets or default_buckets(max_len)))
+        if self.buckets[-1] > self.max_len:
+            raise ValueError("buckets must not exceed max_len")
+        self.compute_dtype = compute_dtype
+        self.cache_dtype = (
+            jnp.float32 if compute_dtype == jnp.float32 else jnp.bfloat16
+        )
+        self.mesh = mesh
+        self.collect_logits = collect_logits
+        ctx = (
+            rules_context(mesh) if mesh is not None
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            if (
+                programmed is None
+                and weight_stationary
+                and self.policy.enabled
+            ):
+                # PRNGKey(0) = the static serving key of the step makers
+                programmed = program_params(
+                    params, cfg, self.policy, jax.random.PRNGKey(0),
+                    mesh=mesh,
+                )
+        self.programmed = programmed
+        self._prefill = _jit_prefill(
+            cfg, self.policy, compute_dtype, self.cache_dtype, mesh
+        )
+        self._decode = _jit_decode(cfg, self.policy, compute_dtype, mesh)
+        self._pack = _jit_pack(cfg)
+
+    # -- helpers ------------------------------------------------------------
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if b >= prompt_len:
+                return b
+        raise ValueError(f"prompt_len {prompt_len} > max bucket")
+
+    def _validate(self, r: Request) -> None:
+        n = len(r.tokens)
+        if n < 1:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if r.max_new_tokens < 1:
+            raise ValueError(f"request {r.rid}: max_new_tokens < 1")
+        if n + r.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt_len({n}) + max_new"
+                f"({r.max_new_tokens}) exceeds max_len({self.max_len})"
+            )
+
+    def _emit(self, st: _SlotState, tok: int, logit_row) -> bool:
+        """Record one token; returns True when the request just finished —
+        nothing is ever emitted past EOS / max-token (the stop contract)."""
+        st.out.append(tok)
+        if st.logits is not None:
+            st.logits.append(np.asarray(logit_row))
+        r = st.request
+        if r.eos_id is not None and tok == r.eos_id:
+            st.finish_reason = "eos"
+        elif len(st.out) >= r.max_new_tokens:
+            st.finish_reason = "length"
+        return st.finish_reason is not None
+
+    def _result(self, st: _SlotState, now: float) -> RequestResult:
+        return RequestResult(
+            rid=st.request.rid,
+            prompt_len=len(st.request.tokens),
+            tokens=st.out,
+            finish_reason=st.finish_reason,
+            submit_time=st.request.submit_time,
+            admit_time=st.admit_time,
+            finish_time=now,
+            decode_steps=st.decode_steps,
+            logits=st.logits,
+        )
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self, requests) -> ServeReport:
+        """Serve ``requests`` to completion; returns per-request results
+        (same order as submitted) plus aggregate throughput/latency."""
+        requests = list(requests)
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique")
+        for r in requests:
+            self._validate(r)
+        ctx = (
+            rules_context(self.mesh) if self.mesh is not None
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            return self._run(requests)
+
+    def _run(self, requests) -> ServeReport:
+        queue = RequestQueue()
+        for r in requests:
+            queue.submit(r)
+        K = self.slots
+        cache = init_cache(self.cfg, K, self.max_len, self.cache_dtype)
+        slot_state: list[_SlotState | None] = [None] * K
+        next_tok = np.zeros((K,), np.int32)
+        active = np.zeros((K,), bool)
+        results: dict[int, RequestResult] = {}
+        t0 = time.monotonic()
+        decode_steps = 0
+        generated = 0
+        occupancy = 0
+
+        def now() -> float:
+            return time.monotonic() - t0
+
+        while len(results) < len(requests):
+            # admit: fill every free slot with a ready request (prefill +
+            # scatter); a request finished by its very first token never
+            # occupies a slot, so the same slot retries the queue
+            for k in range(K):
+                while slot_state[k] is None:
+                    r = queue.pop_ready(now())
+                    if r is None:
+                        break
+                    s = len(r.tokens)
+                    bucket = self._bucket_for(s)
+                    toks = np.zeros((1, bucket), np.int32)
+                    toks[0, :s] = np.asarray(r.tokens, np.int32)
+                    logits, states = self._prefill(
+                        self.params, jnp.asarray(toks), jnp.int32(s),
+                        self.programmed,
+                    )
+                    t_first = int(jnp.argmax(logits[0]))
+                    st = _SlotState(
+                        request=r,
+                        admit_time=now(),
+                        logits=[] if self.collect_logits else None,
+                    )
+                    generated += 1
+                    if self._emit(st, t_first, logits[0]):
+                        results[r.rid] = self._result(st, now())
+                        continue
+                    cache = self._pack(
+                        cache, states, jnp.int32(k), jnp.int32(s)
+                    )
+                    slot_state[k] = st
+                    next_tok[k] = t_first
+                    active[k] = True
+
+            if not active.any():
+                if len(results) == len(requests):
+                    break
+                nxt = queue.next_arrival()
+                if nxt is None:  # pragma: no cover - defensive
+                    break
+                wait = nxt - now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+                continue
+
+            logits, toks, cache = self._decode(
+                self.params, cache, jnp.asarray(next_tok),
+                self.programmed, jnp.asarray(active),
+            )
+            decode_steps += 1
+            occupancy += int(active.sum())
+            toks_np = np.asarray(toks)
+            logits_np = np.asarray(logits) if self.collect_logits else None
+            for k in range(K):
+                if not active[k]:
+                    continue
+                st = slot_state[k]
+                st.decode_steps += 1
+                generated += 1
+                t = int(toks_np[k])
+                row = logits_np[k] if logits_np is not None else None
+                if self._emit(st, t, row):
+                    results[st.request.rid] = self._result(st, now())
+                    slot_state[k] = None
+                    active[k] = False
+                else:
+                    next_tok[k] = t
+
+        wall = now()
+        ordered = [results[r.rid] for r in requests]
+        return ServeReport(
+            results=ordered,
+            wall_s=wall,
+            decode_steps=decode_steps,
+            generated_tokens=generated,
+            occupancy=(
+                occupancy / (decode_steps * K) if decode_steps else 0.0
+            ),
+        )

@@ -36,7 +36,23 @@ from repro.models import forward, program_params
 from repro.models.config import ArchConfig
 from repro.models.model import DIGITAL, init_cache, segments
 
-__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+__all__ = [
+    "make_prefill_step",
+    "make_slot_prefill",
+    "make_decode_step",
+    "greedy_generate",
+]
+
+
+def _head_logits(params, hidden, *, policy, rng, programmed):
+    """Route hidden states through the (possibly analog) lm_head — the
+    single head semantics every prefill/decode path shares."""
+    from repro.models.common import dense, pget
+
+    return dense(
+        params["lm_head"], hidden, name="lm_head", policy=policy,
+        rng=rng, prepared=pget(programmed, "lm_head"),
+    ).astype(jnp.float32)
 
 
 def _cache_from_prefill(cfg, states, batch, s_prefill, max_len, dtype):
@@ -83,8 +99,6 @@ def make_prefill_step(
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
 
     def prefill_step(params, batch, programmed=None):
-        from repro.models.common import dense, pget
-
         hidden, states = forward(
             params, cfg, batch, policy=policy, rng=rng, mode="prefill",
             compute_dtype=compute_dtype, remat=remat, programmed=programmed,
@@ -94,15 +108,62 @@ def make_prefill_step(
         # route the first-token logits through the same (possibly analog)
         # lm_head the decode steps use — the whole generation then sees
         # one consistent hardware semantics
-        logits = dense(
-            params["lm_head"], hidden[:, -1], name="lm_head", policy=policy,
-            rng=rng, prepared=pget(programmed, "lm_head"),
-        ).astype(jnp.float32)
+        logits = _head_logits(
+            params, hidden[:, -1], policy=policy, rng=rng,
+            programmed=programmed,
+        )
         ml = max_len or s
         cache = _cache_from_prefill(cfg, states, b, s, ml, cache_dtype)
         return logits, cache
 
     return prefill_step
+
+
+def make_slot_prefill(
+    cfg: ArchConfig,
+    policy: MemPolicy | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+    cache_dtype=jnp.bfloat16,
+    remat: bool = True,
+):
+    """Slot-addressable prefill for continuous batching (DESIGN.md §7).
+
+    The returned function prefills ONE request whose prompt is padded to
+    a static bucket length and returns
+
+      * logits at the request's LAST REAL token (``prompt_len - 1`` —
+        a traced index, so one compile serves every prompt length that
+        shares a bucket), and
+      * the per-layer serving states at bucket length (NOT padded to the
+        arena's ``max_len``) for :mod:`repro.serve.batching` to scatter
+        into a free slot.
+
+    Right-padding is invisible to the real positions: attention is
+    causal (padded keys sit strictly after every real query) and the DPE
+    input pipeline quantises per row, so a padded prefill computes the
+    same numbers for the real tokens as an exact-length one.
+    """
+    policy = policy or DIGITAL
+    rng = jax.random.PRNGKey(0)  # static programming noise for serving
+
+    def slot_prefill(params, tokens, prompt_len, programmed=None):
+        """tokens: (1, bucket) right-padded; prompt_len: () int32."""
+        hidden, states = forward(
+            params, cfg, {"tokens": tokens}, policy=policy, rng=rng,
+            mode="prefill", compute_dtype=compute_dtype, remat=remat,
+            programmed=programmed,
+        )
+        last = jax.lax.dynamic_index_in_dim(
+            hidden, prompt_len - 1, axis=1, keepdims=False
+        )  # (1, d)
+        logits = _head_logits(
+            params, last, policy=policy, rng=rng, programmed=programmed
+        )
+        states = jax.tree.map(lambda x: x.astype(cache_dtype), states)
+        return logits, states
+
+    return slot_prefill
 
 
 def make_decode_step(
@@ -114,10 +175,11 @@ def make_decode_step(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)
 
-    def decode_fn(params, cache, tokens, programmed=None):
+    def decode_fn(params, cache, tokens, programmed=None, active=None):
         return model_decode(
             params, cfg, cache, tokens, policy=policy, rng=rng,
             compute_dtype=compute_dtype, programmed=programmed,
+            active=active,
         )
 
     return decode_fn

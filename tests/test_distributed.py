@@ -5,6 +5,10 @@ the main pytest session keeps its single-device view (per the dry-run
 isolation rule): real sharded train steps, decode steps, elastic
 checkpoint restore across different mesh shapes, and the collective-
 permute pipeline.
+
+Determinism: the subprocess scripts use fixed ``PRNGKey``/numpy seeds
+only (no time-based state) — reruns are bit-reproducible; the whole
+file is ``slow``-marked (multi-minute subprocess compiles).
 """
 import json
 import os

@@ -126,6 +126,55 @@ def test_batched_input_shapes(xw):
     assert jnp.allclose(y, y2.reshape(4, 24, 80), atol=1e-5)
 
 
+def test_dynamic_row_adc_is_row_independent(xw):
+    """adc_mode="dynamic_row" (the serving/batching contract): one row's
+    output is bitwise identical whether computed alone or batched with
+    strangers — the batch-coupled "dynamic" range max is the only place
+    the pipeline ever mixes rows.  The vectorized engine must also agree
+    with the seed slice-pair loop at this mode."""
+    from repro.core.dpe import (
+        _faithful_matmul,
+        _faithful_matmul_loop,
+        prepare_input,
+        prepare_weight,
+    )
+
+    x, w = xw
+    sp = spec("int8")
+    cfg = DPEConfig(
+        input_spec=sp, weight_spec=sp, array_size=(32, 32),
+        adc_mode="dynamic_row",
+    )
+    pw = prepare_weight(w, cfg, jax.random.PRNGKey(2))
+    run = jax.jit(
+        lambda xs, sx, ws, sc: _faithful_matmul(xs, sx, ws, sc, cfg)
+    )
+    y_all = run(*prepare_input(x, cfg), pw.slices, pw.scale)
+    y_one = run(*prepare_input(x[:1], cfg), pw.slices, pw.scale)
+    assert jnp.array_equal(y_all[0], y_one[0])
+
+    # batch-coupled "dynamic" differs on the same row (the mode exists
+    # precisely because of this)
+    cfg_d = cfg.replace(adc_mode="dynamic")
+    run_d = jax.jit(
+        lambda xs, sx, ws, sc: _faithful_matmul(xs, sx, ws, sc, cfg_d)
+    )
+    yd_all = run_d(*prepare_input(x, cfg_d), pw.slices, pw.scale)
+    yd_one = run_d(*prepare_input(x[:1], cfg_d), pw.slices, pw.scale)
+    assert not jnp.array_equal(yd_all[0], yd_one[0])
+
+    # vectorized engine == seed slice-pair loop at dynamic_row
+    xs, sx = prepare_input(x, cfg)
+    y_loop = _faithful_matmul_loop(xs, sx, pw.slices, pw.scale, cfg)
+    rel = float(relative_error(y_all, y_loop))
+    assert rel <= 1e-5
+
+    # auto backend never routes dynamic_row to the pallas kernel
+    assert (
+        resolve_backend(cfg.replace(backend="auto")) == "xla"
+    )
+
+
 def test_backend_auto_selection(xw):
     """auto -> pallas only on real TPU hosts + faithful mode; explicit
     backends resolve to themselves; auto matmul runs and matches xla."""

@@ -13,6 +13,11 @@ Contract under test:
   tight-tolerance close, with bit-identical greedy tokens.
 * ``MemPolicy.overrides`` routing: layers resolved to ``None`` (digital)
   get no programmed state at all.
+
+Determinism: every PRNG in this file is a fixed ``PRNGKey`` (no
+time/os-derived state), so reruns are bit-reproducible; the >30 s
+whole-graph-compile cases carry the ``slow`` marker so ``-m "not slow"``
+stays fast.
 """
 import jax
 import jax.numpy as jnp
@@ -83,6 +88,7 @@ def test_programmed_reuse_bitmatches_reprogramming(arch, mode_cfg):
         tok = jnp.argmax(logits_a, axis=-1)
 
 
+@pytest.mark.slow  # 33-44 s/case: compiles the inline per-call graph too
 @pytest.mark.parametrize("mode_cfg", [FAITHFUL, FAST], ids=["faithful", "fast"])
 def test_programmed_matches_inline_per_call(mode_cfg):
     """Weight-stationary serving vs the legacy inline re-programming
@@ -122,6 +128,7 @@ def test_programmed_matches_inline_per_call(mode_cfg):
     assert jnp.array_equal(gen_inline, gen_prog)
 
 
+@pytest.mark.slow  # ~32 s/case: two greedy chains per SSM/MoE family
 @pytest.mark.parametrize(
     "arch", ["rwkv6-1.6b", "qwen3-moe-235b-a22b"], ids=["ssm", "moe"]
 )
