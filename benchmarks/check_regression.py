@@ -19,6 +19,10 @@ the same process on the same shape:
   aggregate decode tok/s at the widest slot count vs a single slot (a
   drop means slot-parallel decode stopped amortising the shared
   programmed state).
+* ``serve_chunked.ttft_p95_short_improvement`` — p95 time-to-first-token
+  of short requests under a mixed short/long Poisson workload,
+  unchunked / chunked prefill (a drop means chunked admission stopped
+  bounding the head-of-line blocking of a long prompt's prefill).
 
 A check fails when ``new < baseline / factor``; the default 2.5x bound is
 deliberately loose for the noisy shared CI runner.  Both JSONs are printed
@@ -46,6 +50,10 @@ CHECKS = (
     # count vs 1 slot — a drop means slot-parallel decode stopped
     # amortising the shared programmed state (serve/batching.py)
     ("serve_batching scaling", "serve_batching.scaling_max_slots_vs_1"),
+    # chunked prefill: short-request p95 TTFT, unchunked vs chunked —
+    # a drop means long-prompt admission re-acquired the loop-blocking
+    # behaviour chunking exists to bound (serve/batching.py)
+    ("serve_chunked ttft", "serve_chunked.ttft_p95_short_improvement"),
 )
 
 

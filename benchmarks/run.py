@@ -494,6 +494,121 @@ def bench_serve_batching(quick=False, arch="qwen2-0.5b", policy_name="mem_fast")
     return section
 
 
+def bench_serve_chunked(quick=False, arch="qwen2-0.5b", policy_name="mem_fast"):
+    """Chunked-prefill responsiveness (serve/batching.py, DESIGN.md §7):
+    p95 time-to-first-token of SHORT requests under a mixed short/long
+    Poisson workload, with long prompts prefilled in fixed-size chunks
+    interleaved with decode steps vs monolithically (``prefill_chunk=
+    None``).  Unchunked, a long prompt monopolises the loop for its
+    whole prefill and every short request behind it waits; chunked, the
+    wait is bounded by one chunk.  Both engines run the identical
+    workload on the identical paged arena — the tokens are bitwise
+    identical, only the schedule moves.  Returns the ``serve_chunked``
+    section of ``BENCH_dpe.json``."""
+    from repro.configs import get_smoke
+    from repro.launch.dryrun import make_policy
+    from repro.models import init_params, program_params
+    from repro.serve import Request, ServeLoop
+    from repro.serve.batching import _percentiles
+
+    cfg = get_smoke(arch)
+    policy = make_policy(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # ONE long prompt leads the queue (the head-of-line pattern chunked
+    # admission exists to fix: unchunked, its monolithic prefill blocks
+    # the loop for its whole duration) while short requests Poisson-
+    # arrive inside that window; slots exceed the long count, so short
+    # TTFT is pure loop-blocking, not slot capacity
+    # --quick shrinks the short stream, NOT the long prompt: the ratio
+    # under test is short-TTFT vs the long prefill's loop blocking, and
+    # a short long prompt would drown that signal in host noise
+    n_short, long_len, max_new, chunk = (
+        (6, 1024, 2, 64) if quick else (8, 1024, 4, 64)
+    )
+    # slots cover the one-wave short burst: short TTFT then measures the
+    # loop head-of-line blocking chunking removes, not slot capacity
+    slots, rate = 8, 120.0
+    rng = np.random.default_rng(0)
+    lens = [long_len] + [
+        int(x) for x in rng.integers(4, 17, size=n_short)
+    ]
+    arrivals = np.cumsum(
+        rng.exponential(1.0 / rate, size=len(lens))
+    )
+    arrivals[0] = 0.0  # the long prompt opens the stream
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32) for l in lens
+    ]
+    is_short = [l != long_len for l in lens]
+    max_len = long_len + max_new + 1
+
+    def requests(new=None):
+        return [
+            Request(
+                rid=i, tokens=p, max_new_tokens=new or max_new,
+                submit_time=float(arrivals[i]),
+            )
+            for i, p in enumerate(prompts)
+        ]
+
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(prog))
+
+    # same nearest-rank definition the serve driver reports
+    p95 = lambda vals: _percentiles(vals)["p95"]
+
+    out = {}
+    for label, cl in (("chunked", chunk), ("unchunked", None)):
+        loop = ServeLoop(
+            params, cfg, policy=policy, slots=slots, max_len=max_len,
+            prefill_chunk=cl, block_size=16, compute_dtype=jnp.float32,
+            programmed=prog,
+        )
+        loop.run(requests(new=2))  # warmup: compiles + first-touch
+        rep = loop.run(requests())
+        out[label] = {
+            "ttft_p95_short_s": round(
+                p95(
+                    r.ttft_s
+                    for r, s in zip(rep.results, is_short) if s
+                ), 4,
+            ),
+            "ttft_p95_all_s": round(
+                p95(r.ttft_s for r in rep.results), 4
+            ),
+            "tok_per_s": round(rep.tok_per_s, 1),
+        }
+        _row(
+            f"serve_chunked_{label}", 0.0,
+            f"ttft_p95_short={out[label]['ttft_p95_short_s']*1e3:.1f}ms "
+            f"tok_s={out[label]['tok_per_s']:.0f}",
+        )
+    improvement = round(
+        out["unchunked"]["ttft_p95_short_s"]
+        / max(out["chunked"]["ttft_p95_short_s"], 1e-9), 2,
+    )
+    section = {
+        "arch": f"{arch} (smoke)",
+        "policy": policy_name,
+        "slots": slots,
+        "workload": {
+            "short_requests": n_short,
+            "short_lens": "4-16",
+            "long_requests": 1,
+            "long_len": long_len,
+            "max_new": max_new,
+            "arrival": f"poisson rate={rate}/s, long prompt at t=0",
+        },
+        "prefill_chunk": chunk,
+        "block_size": 16,
+        "chunked": out["chunked"],
+        "unchunked": out["unchunked"],
+        "ttft_p95_short_improvement": improvement,
+    }
+    _row("serve_chunked_improvement", 0.0, f"{improvement}x short-p95 TTFT")
+    return section
+
+
 _SHARDING_SCRIPT = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -610,6 +725,11 @@ def main() -> None:
         except Exception as e:  # keep the trajectory going
             _row("serve_batching", -1, f"ERROR:{type(e).__name__}:{e}")
             report["serve_batching"] = {"error": str(e)}
+        try:
+            report["serve_chunked"] = bench_serve_chunked(quick=args.quick)
+        except Exception as e:  # keep the trajectory going
+            _row("serve_chunked", -1, f"ERROR:{type(e).__name__}:{e}")
+            report["serve_chunked"] = {"error": str(e)}
         try:
             # metadata-only (eval_shape): same cost with/without --quick
             report["programmed_sharding"] = bench_programmed_sharding()

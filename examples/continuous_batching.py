@@ -1,9 +1,15 @@
 """Continuous batching over program-once crossbar state (DESIGN.md §7).
 
-Streams a handful of variable-length requests through the ServeLoop slot
-table — one shared programmed pytree serves every request — and then
-verifies the engine's core promise: each request's tokens are exactly
-what solo greedy decoding produces for that prompt alone.
+Streams variable-length requests through the ServeLoop slot table — one
+shared programmed pytree serves every request, KV lives in a paged
+block-pool arena — and verifies the engine's core promise: each
+request's tokens are exactly what solo greedy decoding produces for
+that prompt alone.
+
+The second half demonstrates CHUNKED PREFILL: a long prompt is admitted
+in fixed-size chunks interleaved with decode steps, so the short
+requests around it get their first token long before the long prefill
+finishes — same tokens, better time-to-first-token.
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -41,7 +47,8 @@ def main():
     )
     print(
         f"served {len(prompts)} requests through 3 slots: "
-        f"{report.tok_per_s:.0f} tok/s, occupancy {report.occupancy:.2f}"
+        f"{report.tok_per_s:.0f} tok/s, occupancy {report.occupancy:.2f}, "
+        f"paged arena {report.kv_blocks} blocks"
     )
     for res in report.results[:2]:
         solo = greedy_generate(
@@ -54,6 +61,38 @@ def main():
             f"request {res.rid} (prompt len {res.prompt_len}): "
             f"{res.tokens[:8]}... batched == solo: {match}"
         )
+
+    # --- chunked prefill: a long prompt never stalls its neighbours ---
+    long_prompt = rng.integers(0, cfg.vocab, size=96).astype(np.int32)
+    shorts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l in (4, 7, 5)
+    ]
+    chunked = ServeLoop(
+        params, cfg, policy=policy, slots=4, max_len=112,
+        prefill_chunk=16, block_size=16,
+        compute_dtype=jnp.float32, programmed=loop.programmed,
+    )
+    reqs = [Request(rid=0, tokens=long_prompt, max_new_tokens=8)] + [
+        Request(rid=i + 1, tokens=p, max_new_tokens=8)
+        for i, p in enumerate(shorts)
+    ]
+    rep = chunked.run(reqs)
+    short_ttft = [r.ttft_s for r in rep.results[1:]]  # shorts only
+    print(
+        f"chunked prefill (96-token prompt in 16-token chunks + 3 "
+        f"shorts): worst short TTFT {1e3 * max(short_ttft):.1f} ms, "
+        f"long TTFT {1e3 * rep.results[0].ttft_s:.1f} ms, "
+        f"{rep.kv_blocks_reused} blocks reused"
+    )
+    solo_long = greedy_generate(
+        params, cfg, jnp.asarray(long_prompt)[None], 7, policy=policy,
+        compute_dtype=jnp.float32, programmed=loop.programmed, max_len=112,
+    )
+    print(
+        "long prompt, chunked batched == solo:",
+        rep.results[0].tokens == list(np.asarray(solo_long[0])),
+    )
 
 
 if __name__ == "__main__":

@@ -13,13 +13,21 @@ measuring what program-once buys:
 
 With ``--requests N`` the driver switches to the continuous-batching
 engine (``serve/batching.py``, DESIGN.md §7): N variable-length requests
-stream through a ``--slots K`` slot table against ONE shared programmed
-state, optionally with Poisson arrivals, and the report adds per-request
-latency percentiles:
+stream through a ``--slots K`` slot table backed by a paged KV arena
+(``--block_size``/``--kv_blocks``) against ONE shared programmed state,
+prompts prefilled in ``--prefill_chunk``-token chunks interleaved with
+decode steps, optionally with Poisson arrivals.  The report splits
+latency into time-to-first-token (queueing + chunked prefill) and
+inter-token latency (decode-phase smoothness):
 
     PYTHONPATH=src python -m repro.launch.serve \
         --smoke --policy mem_fast --requests 8 --slots 4 \
-        --arrival poisson --rate 20
+        --arrival poisson --rate 20 --prefill_chunk 16
+
+Numerics contract (DESIGN.md §7): every request's tokens are identical
+to solo ``greedy_generate`` on that prompt; none of the knobs here
+(slots, chunk size, block size, arrival order) change a logit bit on
+the fast path.
 """
 from __future__ import annotations
 
@@ -68,6 +76,14 @@ def main(argv=None):
     ap.add_argument("--max_len", type=int, default=0,
                     help="KV arena length per slot (0 = fitted to the "
                          "workload)")
+    ap.add_argument("--prefill_chunk", type=int, default=32,
+                    help="prefill chunk length in tokens (0 = unchunked: "
+                         "one bucket-padded chunk per prompt)")
+    ap.add_argument("--block_size", type=int, default=16,
+                    help="paged KV arena block size in tokens")
+    ap.add_argument("--kv_blocks", type=int, default=0,
+                    help="total paged-arena blocks (0 = slots x "
+                         "ceil(max_len/block_size) + trash block)")
     args = ap.parse_args(argv)
     if args.shard_model > 1:
         # must land before jax initialises its backends; only affects the
@@ -186,6 +202,9 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
     max_len = args.max_len or int(lens.max() + args.gen + 1)
     loop = ServeLoop(
         params, cfg, policy=policy, slots=args.slots, max_len=max_len,
+        prefill_chunk=args.prefill_chunk or None,
+        block_size=args.block_size,
+        kv_blocks=args.kv_blocks or None,
         compute_dtype=jnp.float32, programmed=programmed,
         weight_stationary=not args.per_call, mesh=mesh,
     )
@@ -219,6 +238,23 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         "per-request latency s: "
         f"mean={lat['mean']:.3f} p50={lat['p50']:.3f} "
         f"p95={lat['p95']:.3f} max={lat['max']:.3f}"
+    )
+    ttft = report.ttft_percentiles()
+    print(
+        "time-to-first-token s: "
+        f"mean={ttft['mean']:.3f} p50={ttft['p50']:.3f} "
+        f"p95={ttft['p95']:.3f} max={ttft['max']:.3f}"
+    )
+    itl = report.itl_percentiles()
+    if itl:
+        print(
+            "inter-token latency s: "
+            f"mean={itl['mean']:.4f} p50={itl['p50']:.4f} "
+            f"p95={itl['p95']:.4f}"
+        )
+    print(
+        f"paged arena: {report.kv_blocks} blocks x "
+        f"{loop.block_size} tokens, {report.kv_blocks_reused} reused"
     )
     print("sample:", report.results[0].tokens[:16])
     return report

@@ -1,6 +1,6 @@
 """Attention: GQA/MQA/MHA + RoPE + qk-norm + sliding window + KV cache.
 
-Three execution paths:
+Execution paths:
 
 * ``attention_dense``   — full score matrix; short sequences.
 * ``attention_chunked`` — online-softmax over KV chunks (flash-style in
@@ -11,6 +11,13 @@ Three execution paths:
   sharded) KV cache with numerically-stable masked softmax; this is the
   flash-decode path used by decode_32k / long_500k where the KV sequence
   is sharded over the ``model`` mesh axis.
+* paged variants (DESIGN.md §7) — ``decode_attention_block`` with
+  ``block_tables`` and ``chunk_attention_block`` address a *block pool*
+  (``(n_blocks, block_size, KV, hd)``, shared by every serving slot)
+  through per-slot block tables instead of a dense per-slot cache row.
+  Blocks are gathered into logical order before the attention math, so
+  the scores/softmax see exactly the values a dense cache would hold:
+  paged layouts are bitwise-invisible to the numerics.
 
 All projections route through ``dense`` (mem-policy aware).
 """
@@ -28,8 +35,17 @@ __all__ = [
     "init_attn_params",
     "attention_block",
     "decode_attention_block",
+    "chunk_attention_block",
     "init_kv_cache",
+    "TRASH_BLOCK",
 ]
+
+# Physical block 0 of every paged pool is reserved as the *trash block*:
+# unallocated block-table entries point at it, padded prefill tokens and
+# inactive decode lanes write into it, and every read of it is masked to
+# -inf before the softmax (exp underflows to exactly 0.0) — so its
+# contents, although junk, can never reach a logit.
+TRASH_BLOCK = 0
 
 _NEG = -1e30
 
@@ -237,6 +253,44 @@ def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16, layers=None):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool helpers (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def _paged_gather(pool, block_tables):
+    """Materialise a slot-major logical view of the block pool.
+
+    pool: (n_blocks, bs, KV, hd); block_tables: (B, nb) physical block
+    ids → (B, nb*bs, KV, hd).  The gather is a pure data movement: the
+    returned buffer holds, at logical position ``p`` of slot ``b``,
+    exactly the bytes a dense ``(B, max_len)`` arena would hold there
+    (unallocated tail blocks alias the trash block; every read of those
+    positions is masked before the softmax), so downstream attention is
+    bitwise identical to the dense layout.
+    """
+    b, nb = block_tables.shape
+    g = pool[block_tables]  # (B, nb, bs, KV, hd)
+    return g.reshape(b, nb * pool.shape[1], *pool.shape[2:])
+
+
+def _paged_token_write(pool, block_tables, pos, val, active):
+    """Scatter one token's K or V into the pool at logical ``pos``.
+
+    val: (B, KV, hd) already in pool dtype.  Rows with ``active`` False
+    (idle / still-prefilling serving lanes) are routed to the trash
+    block instead — an inactive lane can never mutate live KV, even when
+    its stale block table aliases blocks that were freed and re-allocated
+    to another request (the no-leak half of the paged contract)."""
+    bsz = pool.shape[1]
+    blk = jnp.take_along_axis(
+        block_tables, (pos // bsz)[:, None], axis=1
+    )[:, 0]
+    if active is not None:
+        blk = jnp.where(active, blk, TRASH_BLOCK)
+    return pool.at[blk, pos % bsz].set(val)
+
+
 def attention_block(
     p,
     x,
@@ -302,19 +356,27 @@ def attention_block(
 
 def decode_attention_block(
     p, x1, cfg, *, policy, rng, cache_k, cache_v, pos, name, cross=False,
-    prepared=None, active=None,
+    prepared=None, active=None, block_tables=None,
 ):
-    """One-token attention block against the cache.
+    """One-token attention block against the cache (dense or paged).
 
-    x1: (B, d) the current token's activations; cache_k/v: (B, S, KV, dh);
-    pos: (B,) index of the new token.  Returns (y, new_k1, new_v1) where
-    new_k1/v1 are this token's K/V (caller scatters into the cache) —
-    for cross-attention they are None.
+    x1: (B, d) the current token's activations; pos: (B,) index of the
+    new token.  Two cache layouts:
 
-    ``active``: optional (B,) bool — rows where it is False write their
-    OLD cache values back at ``pos`` instead of this token's K/V, so an
-    idle serving slot never mutates the shared KV arena
-    (serve/batching.py; the caller also freezes the row's ``pos``).
+    * dense (``block_tables=None``) — cache_k/v: (B, S, KV, dh) per-slot
+      rows; returns (y, new_cache_k, new_cache_v).
+    * paged — cache_k/v are the shared block POOL
+      ``(n_blocks, bs, KV, dh)`` and ``block_tables`` (B, nb) maps each
+      slot's logical blocks to physical ones.  The pool is gathered into
+      logical order before the attention math, so logits are bitwise
+      identical to the dense layout for any block placement.
+
+    ``active``: optional (B,) bool — rows where it is False must not
+    mutate live KV: on the dense path they re-write their OLD cache
+    value at ``pos`` (a per-row no-op); on the paged path their write is
+    routed to the trash block (their stale block table may alias blocks
+    since re-allocated to another request).  The caller also freezes the
+    row's ``pos``.
     """
     b, d = x1.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -323,7 +385,6 @@ def decode_attention_block(
     q = q.reshape(b, nh, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"]["scale"])
-    new_k1 = new_v1 = None
     if not cross:
         k1 = dense(p["k_proj"], x1, name=f"{name}.k", policy=policy, rng=rng,
                    prepared=pget(prepared, "k_proj"))
@@ -337,31 +398,110 @@ def decode_attention_block(
             cos, sin = rope(pos, hd, cfg.rope_theta)  # (B, half)
             q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
             k1 = apply_rope(k1[:, None], cos[:, None], sin[:, None])[:, 0]
-        new_k1, new_v1 = k1, v1
         k1c = k1.astype(cache_k.dtype)
         v1c = v1.astype(cache_v.dtype)
-        if active is not None:
-            # inactive slots re-write the value already stored at pos —
-            # the update is a per-row no-op and the arena stays intact
-            take = jax.vmap(
-                lambda c, i: lax.dynamic_slice(
-                    c, (i, 0, 0), (1,) + c.shape[1:]
-                )[0]
+        if block_tables is not None:
+            cache_k = _paged_token_write(
+                cache_k, block_tables, pos, k1c, active
             )
-            sel = active[:, None, None]
-            k1c = jnp.where(sel, k1c, take(cache_k, pos))
-            v1c = jnp.where(sel, v1c, take(cache_v, pos))
-        cache_k = jax.vmap(
-            lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
-        )(cache_k, k1c, pos)
-        cache_v = jax.vmap(
-            lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
-        )(cache_v, v1c, pos)
+            cache_v = _paged_token_write(
+                cache_v, block_tables, pos, v1c, active
+            )
+        else:
+            if active is not None:
+                # inactive slots re-write the value already stored at pos
+                # — the update is a per-row no-op, the arena stays intact
+                take = jax.vmap(
+                    lambda c, i: lax.dynamic_slice(
+                        c, (i, 0, 0), (1,) + c.shape[1:]
+                    )[0]
+                )
+                sel = active[:, None, None]
+                k1c = jnp.where(sel, k1c, take(cache_k, pos))
+                v1c = jnp.where(sel, v1c, take(cache_v, pos))
+            cache_k = jax.vmap(
+                lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
+            )(cache_k, k1c, pos)
+            cache_v = jax.vmap(
+                lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
+            )(cache_v, v1c, pos)
+    if block_tables is not None:
+        att_k = _paged_gather(cache_k, block_tables)
+        att_v = _paged_gather(cache_v, block_tables)
+    else:
+        att_k, att_v = cache_k, cache_v
     out = attention_decode(
-        q, cache_k, cache_v, pos, window=cfg.swa_window if not cross else 0
+        q, att_k, att_v, pos, window=cfg.swa_window if not cross else 0
     )
     y = dense(
         p["o_proj"], out.reshape(b, nh * hd), name=f"{name}.o",
         policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),
     )
     return y, cache_k, cache_v
+
+
+def chunk_attention_block(
+    p, x, cfg, *, policy, rng, pool_k, pool_v, bt_row, start, n_valid,
+    positions, name, prepared=None,
+):
+    """Attention block for one CHUNK of a prompt against the paged pool
+    (chunked prefill, serve/batching.py, DESIGN.md §7).
+
+    x: (1, C, d) chunk activations, right-padded past ``n_valid``;
+    ``start``: logical position of the chunk's first token; ``bt_row``:
+    (nb,) this slot's block table.  The chunk's K/V are written into the
+    slot's blocks first (pad tokens route to the trash block), then the
+    queries attend over the GATHERED logical view — prefix written by
+    earlier chunks plus this chunk — under the causal ``ki <= qi`` mask.
+
+    Numerics contract: per-token math is identical to single-shot
+    prefill — same projections, same RoPE positions, same masked-softmax
+    attention over the same values in the same logical order — so the
+    fast path is bitwise chunk-size-invariant (masked tail keys
+    contribute exactly 0.0 after ``exp``; pad-token activations are junk
+    but causally invisible to real tokens).  Returns
+    (y, new_pool_k, new_pool_v).
+    """
+    b, c, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["q_proj"], x, name=f"{name}.q", policy=policy, rng=rng,
+              prepared=pget(prepared, "q_proj"))
+    k = dense(p["k_proj"], x, name=f"{name}.k", policy=policy, rng=rng,
+              prepared=pget(prepared, "k_proj"))
+    v = dense(p["v_proj"], x, name=f"{name}.v", policy=policy, rng=rng,
+              prepared=pget(prepared, "v_proj"))
+    q = _split_heads(q, nh, hd)
+    k = _split_heads(k, nkv, hd)
+    v = _split_heads(v, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    if cfg.rope_theta > 0:
+        cos, sin = rope(positions, hd, cfg.rope_theta)  # (1, C, half)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    # scatter the chunk's K/V into the slot's blocks; pad tokens (their
+    # logical position is >= start + n_valid) go to the trash block
+    bsz = pool_k.shape[1]
+    lp = start + jnp.arange(c)
+    valid = jnp.arange(c) < n_valid
+    blk = jnp.where(valid, bt_row[jnp.clip(lp // bsz, 0, bt_row.shape[0] - 1)],
+                    TRASH_BLOCK)
+    off = lp % bsz
+    pool_k = pool_k.at[blk, off].set(k.astype(pool_k.dtype)[0])
+    pool_v = pool_v.at[blk, off].set(v.astype(pool_v.dtype)[0])
+    # attend over the gathered logical view (prefix + this chunk); keys
+    # past each query's position — including every pad position — are
+    # masked to -inf by the causal mask inside attention_dense
+    g_k = _paged_gather(pool_k, bt_row[None])
+    g_v = _paged_gather(pool_v, bt_row[None])
+    out = attention_dense(q, g_k, g_v, q_off=start, window=cfg.swa_window)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    y = dense(
+        p["o_proj"], out.reshape(b, c, nh * hd), name=f"{name}.o",
+        policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),
+    )
+    return y, pool_k, pool_v

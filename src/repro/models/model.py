@@ -35,6 +35,7 @@ from .config import ArchConfig
 from .ssm import init_mamba_state, init_rwkv6_state
 from .transformer import (
     _ffn_forward,
+    block_chunk,
     block_decode,
     block_forward,
     group_size,
@@ -47,8 +48,10 @@ __all__ = [
     "init_params",
     "forward",
     "decode_step",
+    "prefill_chunk_step",
     "loss_fn",
     "init_cache",
+    "init_paged_cache",
 ]
 
 DIGITAL = MemPolicy(default=None)
@@ -320,6 +323,52 @@ def _one_layer_cache(cfg, layer_idx, batch, max_len, dtype):
     return {"h": st["h"][0], "conv": st["conv"][0]}
 
 
+def init_paged_cache(
+    cfg: ArchConfig,
+    slots: int,
+    max_len: int,
+    block_size: int,
+    n_blocks: int,
+    dtype=jnp.bfloat16,
+):
+    """Allocate the PAGED serving cache (DESIGN.md §7).
+
+    Instead of a dense ``(slots, max_len)`` KV row per lane, every
+    attention layer owns one block POOL ``(n_blocks, block_size, KV, hd)``
+    shared by all slots, addressed through per-slot ``block_tables``
+    ``(slots, ceil(max_len/block_size))``.  Physical block 0 is the
+    reserved trash block (never allocated): table entries initialised to
+    it are "unallocated", pad/idle writes are routed to it, and every
+    read of it is masked before the softmax — so the pool can be sized
+    to the live working set (``n_blocks`` < slots*blocks_per_slot) and
+    freed blocks can be re-used across requests without KV leakage.
+
+    Attention-only families (the serving loop enforces this): SSM /
+    hybrid state is recurrent, not positional, so it has nothing to
+    page.
+    """
+    kinds = {cfg.layer_kind(i)[0] for i in range(cfg.n_layers)}
+    if kinds != {"attn"} or cfg.encoder is not None:
+        raise NotImplementedError(
+            "paged KV cache requires homogeneous all-attention layers"
+        )
+    if n_blocks < 2:
+        raise ValueError("n_blocks must be >= 2 (block 0 is the trash block)")
+    nb_per_slot = -(-max_len // block_size)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = {
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "block_tables": jnp.zeros((slots, nb_per_slot), jnp.int32),
+        "blocks": {},
+    }
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        cache["blocks"][f"seg{si}"] = {
+            "k": jnp.zeros((steps, n_blocks, block_size, kvh, hd), dtype),
+            "v": jnp.zeros((steps, n_blocks, block_size, kvh, hd), dtype),
+        }
+    return cache
+
+
 def _seg_cache(cfg, tmpl, steps, batch, max_len, dtype):
     g = group_size(cfg)
     if g == 1:
@@ -355,7 +404,13 @@ def decode_step(
     serve/batching.py): rows where it is False neither advance ``pos``
     nor mutate their KV / recurrent state — an idle slot's row is
     completely frozen while its neighbours keep decoding.  Logits are
-    still produced for every row; callers ignore the inactive ones."""
+    still produced for every row; callers ignore the inactive ones.
+
+    Cache layouts: the dense ``init_cache`` pytree, or the paged
+    ``init_paged_cache`` pytree (detected by its ``block_tables`` leaf)
+    — blocks are gathered into logical order before the attention math,
+    so for the same stored KV the two layouts produce bitwise-identical
+    logits on the fast path."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if cfg.encoder is not None:
         return _encdec_decode(
@@ -363,10 +418,13 @@ def decode_step(
             compute_dtype=compute_dtype, programmed=programmed,
             active=active,
         )
+    block_tables = cache.get("block_tables")
     x1 = jnp.take(params["embed"]["w"].astype(compute_dtype), tokens, axis=0)
     pos = cache["pos"]
     inc = 1 if active is None else active.astype(jnp.int32)
     new_cache = {"pos": pos + inc, "blocks": {}}
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
     prog_blocks = pget(programmed, "blocks")
     for si, (start, steps, tmpl) in enumerate(segments(cfg)):
         seg_p = params["blocks"][f"seg{si}"]
@@ -380,6 +438,7 @@ def decode_step(
             x1, st = block_decode(
                 p_l, x1, cfg, tmpl, policy=policy, rng=rng_l, pos=pos,
                 state=c_l, prepared=prog_l, active=active,
+                block_tables=block_tables,
             )
             return x1, st
 
@@ -393,6 +452,103 @@ def decode_step(
         prepared=pget(programmed, "lm_head"),
     ).astype(jnp.float32)
     logits = constrain(logits, "batch", "vocab")
+    return logits, new_cache
+
+
+def prefill_chunk_step(
+    params,
+    cfg: ArchConfig,
+    cache: dict,
+    tokens: jax.Array,  # (C,) one chunk of one prompt, right-padded
+    slot: jax.Array,  # () int32
+    start: jax.Array,  # () int32 logical position of tokens[0]
+    n_valid: jax.Array,  # () int32 real tokens in this chunk
+    final: jax.Array = None,  # () bool: is this the prompt's last chunk?
+    *,
+    policy: MemPolicy = DIGITAL,
+    rng=None,
+    compute_dtype=jnp.bfloat16,
+    programmed=None,
+):
+    """One CHUNKED-PREFILL step against the paged cache (DESIGN.md §7).
+
+    Runs ``tokens`` (one fixed-size chunk of one request's prompt)
+    through the full layer stack, writing each layer's K/V into slot
+    ``slot``'s blocks at logical positions ``start .. start+n_valid-1``
+    (pad tokens route to the trash block), and returns
+    ``(logits, cache)`` where ``logits`` (1, V) are taken at the chunk's
+    LAST REAL token — the request's first-token logits on a prompt's
+    final chunk.  When ``final`` (traced bool) is False the final-norm +
+    lm_head are skipped (``lax.cond``) and zeros are returned: only a
+    prompt's last chunk pays the (possibly analog) vocab projection.
+    ``cache["pos"][slot]`` advances to ``start + n_valid`` so a
+    completed prefill leaves the lane decode-ready.
+
+    Numerics contract: layer names and the PRNG fold chain mirror
+    ``forward``/``decode_step`` exactly (programmed-state lookup and
+    programming noise agree), and per-token math is chunk-size-invariant
+    — on the fast path the final logits are BITWISE identical for every
+    chunk size, and token-identical to solo ``greedy_generate`` prefill
+    (tests/test_batching.py).
+    """
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    c = tokens.shape[0]
+    x = jnp.take(
+        params["embed"]["w"].astype(compute_dtype), tokens[None], axis=0
+    )  # (1, C, d)
+    positions = (start + jnp.arange(c))[None]  # (1, C)
+    bt_row = lax.dynamic_index_in_dim(
+        cache["block_tables"], slot, axis=0, keepdims=False
+    )
+    new_cache = {
+        "pos": lax.dynamic_update_slice(
+            cache["pos"], (start + n_valid)[None].astype(jnp.int32), (slot,)
+        ),
+        "block_tables": cache["block_tables"],
+        "blocks": {},
+    }
+    prog_blocks = pget(programmed, "blocks")
+    for si, (seg_start, steps, tmpl) in enumerate(segments(cfg)):
+        seg_p = params["blocks"][f"seg{si}"]
+        seg_c = cache["blocks"][f"seg{si}"]
+        prog_seg = pget(prog_blocks, f"seg{si}")
+        rng_s = jax.random.fold_in(rng, si)
+
+        def step(x, inp):
+            p_l, prog_l, c_l, idx = inp
+            rng_l = jax.random.fold_in(rng_s, idx)
+            x, st = block_chunk(
+                p_l, x, cfg, tmpl, policy=policy, rng=rng_l, state=c_l,
+                bt_row=bt_row, start=start, n_valid=n_valid,
+                positions=positions, prepared=prog_l,
+            )
+            return x, st
+
+        x, new_states = lax.scan(
+            step, x, (seg_p, prog_seg, seg_c, jnp.arange(steps))
+        )
+        new_cache["blocks"][f"seg{si}"] = new_states
+    last = lax.dynamic_index_in_dim(
+        x, n_valid - 1, axis=1, keepdims=False
+    )  # (1, d) pre-norm hidden of the chunk's last real token
+
+    def head(h):
+        # norm is per-position, so norm(x)[i] == norm(x[i]) — running it
+        # on the extracted token computes the same values single-shot
+        # prefill computes on the full sequence
+        h = norm(h, params["final_norm"], cfg.norm)
+        return dense(
+            params["lm_head"], h, name="lm_head", policy=policy, rng=rng,
+            prepared=pget(programmed, "lm_head"),
+        ).astype(jnp.float32)
+
+    if final is None:
+        logits = head(last)
+    else:
+        logits = lax.cond(
+            final, head, lambda h: jnp.zeros((1, cfg.vocab), jnp.float32),
+            last,
+        )
     return logits, new_cache
 
 

@@ -15,6 +15,7 @@ from jax import lax
 
 from .attention import (
     attention_block,
+    chunk_attention_block,
     decode_attention_block,
     init_attn_params,
 )
@@ -42,6 +43,7 @@ __all__ = [
     "init_block_params",
     "block_forward",
     "block_decode",
+    "block_chunk",
     "group_size",
     "n_groups",
 ]
@@ -203,7 +205,7 @@ def _freeze_inactive(active, new, old):
 
 
 def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
-                  prepared=None, active=None):
+                  prepared=None, active=None, block_tables=None):
     kind, _ = cfg.layer_kind(layer_idx)
     name = f"L.{kind}"
     h = norm(x1, p["norm1"], cfg.norm)
@@ -213,6 +215,7 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
             p["attn"], h, cfg, policy=policy, rng=rng,
             cache_k=state["k"], cache_v=state["v"], pos=pos, name=name,
             prepared=pget(prepared, "attn"), active=active,
+            block_tables=block_tables,
         )
         new_state["k"], new_state["v"] = ck, cv
     elif cfg.ssm.kind == "rwkv6":
@@ -241,20 +244,53 @@ def _layer_decode(p, x1, cfg, layer_idx, *, policy, rng, pos, state,
 
 
 def block_decode(p, x1, cfg, template_idx, *, policy, rng, pos, state,
-                 prepared=None, active=None):
+                 prepared=None, active=None, block_tables=None):
     g = group_size(cfg)
     if g == 1:
         return _layer_decode(
             p, x1, cfg, template_idx,
             policy=policy, rng=rng, pos=pos, state=state, prepared=prepared,
-            active=active,
+            active=active, block_tables=block_tables,
         )
     new_states = {}
     for j in range(g):
         x1, st = _layer_decode(
             p[f"l{j}"], x1, cfg, j, policy=policy, rng=rng, pos=pos,
             state=state[f"l{j}"], prepared=pget(prepared, f"l{j}"),
-            active=active,
+            active=active, block_tables=block_tables,
         )
         new_states[f"l{j}"] = st
     return x1, new_states
+
+
+def block_chunk(p, x, cfg, template_idx, *, policy, rng, state, bt_row,
+                start, n_valid, positions, prepared=None):
+    """One scan step of CHUNKED PREFILL (DESIGN.md §7): run a prompt
+    chunk ``x`` (1, C, d) through one attention layer, writing its K/V
+    into the paged pool at this slot's block table.
+
+    Attention-only — recurrent layers cannot replay a right-padded chunk
+    (the serving loop rejects those families at construction).  Uses the
+    same layer names and the caller's per-layer rng, so programmed-state
+    lookup and programming-noise keys match ``block_forward`` /
+    ``block_decode`` exactly.
+    """
+    kind, _ = cfg.layer_kind(template_idx)
+    if group_size(cfg) != 1 or kind != "attn":
+        raise NotImplementedError(
+            "chunked prefill requires homogeneous all-attention layers"
+        )
+    name = f"L.{kind}"
+    h = norm(x, p["norm1"], cfg.norm)
+    y, pk, pv = chunk_attention_block(
+        p["attn"], h, cfg, policy=policy, rng=rng,
+        pool_k=state["k"], pool_v=state["v"], bt_row=bt_row, start=start,
+        n_valid=n_valid, positions=positions, name=name,
+        prepared=pget(prepared, "attn"),
+    )
+    x = x + y
+    h = norm(x, p["norm2"], cfg.norm)
+    x = x + _ffn_forward(
+        p, h, cfg, policy=policy, rng=rng, name=name, prepared=prepared
+    )
+    return x, {"k": pk, "v": pv}

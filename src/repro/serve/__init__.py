@@ -8,6 +8,7 @@ from .batching import (
 )
 from .engine import (
     greedy_generate,
+    make_chunk_prefill,
     make_decode_step,
     make_prefill_step,
     make_slot_prefill,
@@ -16,6 +17,7 @@ from .engine import (
 __all__ = [
     "make_prefill_step",
     "make_slot_prefill",
+    "make_chunk_prefill",
     "make_decode_step",
     "greedy_generate",
     "Request",

@@ -8,25 +8,28 @@ this module amortises it over a *stream* of requests (DESIGN.md §7):
 * :class:`RequestQueue` holds submitted :class:`Request`\\ s (FIFO among
   the ones whose arrival time has passed).
 * :class:`ServeLoop` owns a fixed table of ``slots`` decode lanes backed
-  by one preallocated KV arena (``slots x max_len``, donated across
-  steps) and ONE shared programmed pytree (replicated or mesh-sharded).
-  Each iteration admits requests into free slots (bucket-padded prefill
-  → scatter into the slot, no recompile per prompt length), runs one
-  jitted slot-parallel decode step with per-slot positions / length
-  masks / active flags, and retires finished sequences per slot (EOS or
-  max-token), immediately refilling from the queue.
+  by a PAGED KV arena — one block pool per attention layer
+  (``kv_blocks x block_size`` token rows, donated across steps) indexed
+  through per-slot block tables — and ONE shared programmed pytree
+  (replicated or mesh-sharded).  Each iteration (1) admits ready
+  requests into free lanes, allocating their blocks from the pool's
+  free list, (2) advances every still-prefilling lane by exactly ONE
+  prompt chunk (chunked prefill: a long prompt never monopolises an
+  iteration), and (3) runs one jitted slot-parallel decode step for the
+  active lanes, retiring finished sequences (EOS / max-token), freeing
+  their blocks, and refilling from the queue next iteration.
 
-Equivalence contract (tests/test_batching.py): a request decoded through
-this engine emits exactly the tokens ``greedy_generate`` emits for it
-alone, because every per-row computation in the decode graph is
-independent of the other rows — per-row input quantisation, per-row
-(``dynamic_row``/``fullscale``) ADC ranging, per-slot masked attention
-over the arena, and GEMM rows that never mix.  On the fast engine the
-per-step logits are bitwise identical across packings; the faithful
-engine agrees to GEMM-kernel rounding (different batch extents pick
-different CPU micro-kernels) with tokens equal.  Batch-coupled numerics
-(faithful ``adc_mode="dynamic"``, which ranges its ADC over the whole
-batch) are rejected at construction unless explicitly allowed.
+Equivalence contract (tests/test_batching.py, DESIGN.md §7): a request
+decoded through this engine emits exactly the tokens ``greedy_generate``
+emits for it alone, because every per-row computation in the graph is
+row-independent and both the paged layout and the prefill chunking are
+pure data movement — blocks are gathered into logical order before the
+attention math, and masked tail keys contribute exactly 0.0 after
+``exp``.  On the fast engine the per-step logits are BITWISE identical
+across packings, chunk sizes, and block-table layouts; the faithful
+row-independent engine (``adc_mode="dynamic_row"``/``fullscale``) agrees
+to GEMM-kernel rounding with tokens equal.  Batch-coupled numerics
+(faithful ``adc_mode="dynamic"``) are rejected at construction.
 """
 from __future__ import annotations
 
@@ -44,9 +47,9 @@ from jax import lax
 from repro.core.layers import MemPolicy
 from repro.distributed.sharding import rules_context
 from repro.models import program_params
-from repro.models.model import init_cache
+from repro.models.model import init_paged_cache
 
-from .engine import make_decode_step, make_slot_prefill
+from .engine import make_chunk_prefill, make_decode_step
 
 __all__ = [
     "Request",
@@ -83,44 +86,96 @@ class Request:
 
 @dataclass
 class RequestResult:
+    """Per-request outcome.  ``tokens`` are exactly the tokens solo
+    ``greedy_generate`` would emit for this prompt (the batched==solo
+    contract); timing fields are host wall-clock seconds relative to
+    ``ServeLoop.run`` start."""
+
     rid: int
     prompt_len: int
     tokens: list[int]
     finish_reason: str  # "eos" | "length"
     submit_time: float
     admit_time: float
+    first_token_time: float
     finish_time: float
     decode_steps: int
     logits: list[np.ndarray] | None = None  # only when collect_logits
 
     @property
     def latency_s(self) -> float:
+        """End-to-end latency: submit → last token."""
         return self.finish_time - self.submit_time
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: submit → first emitted token (includes
+        queueing and the chunked prefill of the prompt)."""
+        return self.first_token_time - self.submit_time
+
+    @property
+    def itl_s(self) -> float:
+        """Mean inter-token latency over the decode phase (0.0 for
+        single-token results)."""
+        n = len(self.tokens) - 1
+        if n <= 0:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / n
+
+
+def _percentiles(vals) -> dict:
+    vals = sorted(vals)
+    if not vals:
+        return {}
+    pick = lambda q: vals[min(len(vals) - 1, int(q * len(vals)))]
+    return {
+        "mean": sum(vals) / len(vals),
+        "p50": pick(0.50),
+        "p95": pick(0.95),
+        "max": vals[-1],
+    }
 
 
 @dataclass
 class ServeReport:
+    """Aggregate outcome of one ``ServeLoop.run``.
+
+    ``results`` are in submission order.  ``kv_blocks_reused`` counts
+    pool blocks that were freed by a retired request and re-allocated to
+    a later one (the paged-arena reclaim at work); ``trace`` (only with
+    ``collect_trace=True``) records per-iteration scheduler activity —
+    ``{"chunks": prefill chunks run, "decoded": lanes decoded}`` — for
+    starvation analysis."""
+
     results: list[RequestResult]
     wall_s: float
     decode_steps: int
     generated_tokens: int
     occupancy: float  # mean active slots per decode step / total slots
+    kv_blocks: int = 0
+    kv_blocks_reused: int = 0
+    trace: list | None = None
 
     @property
     def tok_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
     def latency_percentiles(self) -> dict:
-        lats = sorted(r.latency_s for r in self.results)
-        if not lats:
-            return {}
-        pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
-        return {
-            "mean": sum(lats) / len(lats),
-            "p50": pick(0.50),
-            "p95": pick(0.95),
-            "max": lats[-1],
-        }
+        """End-to-end (submit → last token) latency percentiles."""
+        return _percentiles(r.latency_s for r in self.results)
+
+    def ttft_percentiles(self) -> dict:
+        """Time-to-first-token percentiles — the responsiveness metric
+        chunked prefill targets (a long neighbour's prompt no longer
+        stalls a short request's first token)."""
+        return _percentiles(r.ttft_s for r in self.results)
+
+    def itl_percentiles(self) -> dict:
+        """Per-request mean inter-token-latency percentiles (decode-phase
+        smoothness; requests with a single token are excluded)."""
+        return _percentiles(
+            r.itl_s for r in self.results if len(r.tokens) > 1
+        )
 
 
 class RequestQueue:
@@ -152,16 +207,15 @@ class RequestQueue:
 # ---------------------------------------------------------------------------
 # jitted step cache — shared across ServeLoop instances so repeated
 # construction (tests, sweeps over slot counts) never re-jits; shape
-# specialisation per (slots, bucket) is jax's own cache.
+# specialisation per (slots, chunk_len, pool geometry) is jax's own cache.
 # ---------------------------------------------------------------------------
 
 
 @lru_cache(maxsize=None)
-def _jit_prefill(cfg, policy, compute_dtype, cache_dtype, mesh):
-    fn = make_slot_prefill(
-        cfg, policy, compute_dtype=compute_dtype, cache_dtype=cache_dtype
-    )
-    return jax.jit(fn)
+def _jit_chunk(cfg, policy, compute_dtype, mesh):
+    fn = make_chunk_prefill(cfg, policy, compute_dtype=compute_dtype)
+    # donate the arena: chunk KV writes alias the previous buffer
+    return jax.jit(fn, donate_argnums=(1,))
 
 
 @lru_cache(maxsize=None)
@@ -177,32 +231,25 @@ def _jit_decode(cfg, policy, compute_dtype, mesh):
 
 
 @lru_cache(maxsize=None)
-def _jit_pack(cfg):
-    def pack(cache, states, slot, prompt_len):
-        """Scatter one prefilled request into arena slot ``slot``.
-
-        ``states`` leaves are (steps, 1, bucket, ...) — written at
-        [:, slot, :bucket]; positions in (prompt_len, max_len) keep
-        whatever the slot held before, which the per-slot length mask
-        (`ki <= pos`) makes exactly invisible until decode overwrites
-        them one token at a time.
-        """
-
-        def put(c, s):
-            idx = (0, slot) + (0,) * (c.ndim - 2)
-            return lax.dynamic_update_slice(c, s.astype(c.dtype), idx)
-
-        blocks = jax.tree.map(put, cache["blocks"], states)
-        pos = lax.dynamic_update_slice(
-            cache["pos"], prompt_len[None].astype(jnp.int32), (slot,)
+def _jit_admit():
+    def admit(cache, slot, bt_row):
+        """Bind a slot to a fresh block-table row and reset its pos —
+        pure bookkeeping, no KV bytes move."""
+        tables = lax.dynamic_update_slice(
+            cache["block_tables"], bt_row[None], (slot, 0)
         )
-        return {"pos": pos, "blocks": blocks}
+        pos = lax.dynamic_update_slice(
+            cache["pos"], jnp.zeros((1,), jnp.int32), (slot,)
+        )
+        return {**cache, "block_tables": tables, "pos": pos}
 
-    return jax.jit(pack, donate_argnums=(0,))
+    return jax.jit(admit, donate_argnums=(0,))
 
 
 def default_buckets(max_len: int) -> tuple[int, ...]:
-    """Prompt-length pad buckets: powers of two capped at ``max_len``."""
+    """Prompt-length pad buckets: powers of two capped at ``max_len``.
+    With ``prefill_chunk=None`` these are the single-chunk lengths (one
+    compile per bucket, no recompile per prompt length)."""
     out = []
     b = 8
     while b < max_len:
@@ -221,6 +268,9 @@ def default_buckets(max_len: int) -> tuple[int, ...]:
 class _SlotState:
     request: Request
     admit_time: float
+    blocks: list
+    prefill_pos: int = 0
+    first_token_time: float = 0.0
     out: list = field(default_factory=list)
     logits: list | None = None
     decode_steps: int = 0
@@ -229,6 +279,29 @@ class _SlotState:
 
 class ServeLoop:
     """Continuous-batching greedy decoding against shared programmed state.
+
+    Scheduler (DESIGN.md §7) — per iteration, in order:
+
+    1. **Admit**: every free lane takes the next ready request FIFO, if
+       the block pool can cover its full KV need
+       (``ceil((prompt_len + max_new - 1) / block_size)`` blocks,
+       allocated eagerly so decode never stalls mid-stream); otherwise
+       the request waits for a retirement to free blocks.
+    2. **Prefill one chunk per lane**: each still-prefilling lane
+       advances by exactly ONE chunk of ``prefill_chunk`` tokens
+       (``None`` = the whole prompt in one bucket-padded chunk).  A long
+       prompt therefore spreads over many iterations and can never
+       monopolise one — active lanes decode between its chunks.
+    3. **Decode**: one jitted slot-parallel step over the active lanes;
+       finished sequences (EOS / max-token) retire, their blocks return
+       to the free list, and the lane re-enters admission next
+       iteration.
+
+    Numerics contract: per-request tokens are identical to solo
+    ``greedy_generate``; fast-path logits are bitwise invariant to
+    packing, chunk size, and block placement (module docstring).
+    Policies that couple batch rows (faithful ``adc_mode="dynamic"``)
+    are rejected.
 
     Supports every all-attention decoder family (dense / MoE — per-row
     routing keeps MoE dispatch request-local).  Recurrent-state families
@@ -245,12 +318,16 @@ class ServeLoop:
         policy: MemPolicy | None = None,
         slots: int = 4,
         max_len: int = 256,
+        prefill_chunk: int | None = None,
+        block_size: int = 16,
+        kv_blocks: int | None = None,
         buckets: tuple[int, ...] | None = None,
         compute_dtype=jnp.bfloat16,
         programmed=None,
         weight_stationary: bool = True,
         mesh=None,
         collect_logits: bool = False,
+        collect_trace: bool = False,
         allow_coupled_numerics: bool = False,
     ):
         if cfg.encoder is not None or cfg.vision_prefix:
@@ -285,6 +362,21 @@ class ServeLoop:
         self.cfg = cfg
         self.slots = int(slots)
         self.max_len = int(max_len)
+        self.block_size = int(block_size)
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.blocks_per_slot = -(-self.max_len // self.block_size)
+        # +1: physical block 0 is the reserved trash block
+        self.kv_blocks = int(
+            kv_blocks
+            if kv_blocks is not None
+            else self.slots * self.blocks_per_slot + 1
+        )
+        if self.kv_blocks < 2:
+            raise ValueError("kv_blocks must be >= 2 (block 0 is trash)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 (or None)")
+        self.prefill_chunk = prefill_chunk
         self.buckets = tuple(sorted(buckets or default_buckets(max_len)))
         if self.buckets[-1] > self.max_len:
             raise ValueError("buckets must not exceed max_len")
@@ -294,6 +386,7 @@ class ServeLoop:
         )
         self.mesh = mesh
         self.collect_logits = collect_logits
+        self.collect_trace = collect_trace
         ctx = (
             rules_context(mesh) if mesh is not None
             else contextlib.nullcontext()
@@ -310,11 +403,33 @@ class ServeLoop:
                     mesh=mesh,
                 )
         self.programmed = programmed
-        self._prefill = _jit_prefill(
-            cfg, self.policy, compute_dtype, self.cache_dtype, mesh
-        )
+        self._chunk = _jit_chunk(cfg, self.policy, compute_dtype, mesh)
         self._decode = _jit_decode(cfg, self.policy, compute_dtype, mesh)
-        self._pack = _jit_pack(cfg)
+        self._admit = _jit_admit()
+        # host-side block allocator (block 0 = trash, never allocated)
+        self._free_list = list(range(1, self.kv_blocks))
+        self._ever_freed: set = set()
+        self.blocks_reused = 0
+
+    # -- block allocator ----------------------------------------------------
+
+    def _blocks_needed(self, r: Request) -> int:
+        # KV positions written: prompt 0..plen-1, decode up to
+        # plen+max_new-2 (the final emitted token's KV is never stored)
+        return -(-(len(r.tokens) + r.max_new_tokens - 1) // self.block_size)
+
+    def _alloc_blocks(self, n: int) -> list | None:
+        if len(self._free_list) < n:
+            return None
+        blocks = [self._free_list.pop() for _ in range(n)]
+        self.blocks_reused += sum(
+            1 for b in blocks if b in self._ever_freed
+        )
+        return blocks
+
+    def _release_blocks(self, blocks: list) -> None:
+        self._ever_freed.update(blocks)
+        self._free_list.extend(blocks)
 
     # -- helpers ------------------------------------------------------------
 
@@ -334,6 +449,11 @@ class ServeLoop:
             raise ValueError(
                 f"request {r.rid}: prompt_len({n}) + max_new"
                 f"({r.max_new_tokens}) exceeds max_len({self.max_len})"
+            )
+        if self._blocks_needed(r) > self.kv_blocks - 1:
+            raise ValueError(
+                f"request {r.rid}: needs {self._blocks_needed(r)} KV "
+                f"blocks but the pool holds {self.kv_blocks - 1}"
             )
 
     def _emit(self, st: _SlotState, tok: int, logit_row) -> bool:
@@ -357,6 +477,7 @@ class ServeLoop:
             finish_reason=st.finish_reason,
             submit_time=st.request.submit_time,
             admit_time=st.admit_time,
+            first_token_time=st.first_token_time,
             finish_time=now,
             decode_steps=st.decode_steps,
             logits=st.logits,
@@ -366,7 +487,10 @@ class ServeLoop:
 
     def run(self, requests) -> ServeReport:
         """Serve ``requests`` to completion; returns per-request results
-        (same order as submitted) plus aggregate throughput/latency."""
+        (same order as submitted) plus aggregate throughput/latency.
+        Tokens per request satisfy the batched==solo contract (module
+        docstring); requests whose prompt + budget exceed ``max_len`` or
+        the whole block pool are refused, not clamped."""
         requests = list(requests)
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
@@ -384,12 +508,22 @@ class ServeLoop:
         queue = RequestQueue()
         for r in requests:
             queue.submit(r)
+        # fresh allocator per run — reuse stats are per-run, and a run
+        # that raised mid-flight must not leak blocks into the next one
+        self._free_list = list(range(1, self.kv_blocks))
+        self._ever_freed = set()
+        self.blocks_reused = 0
         K = self.slots
-        cache = init_cache(self.cfg, K, self.max_len, self.cache_dtype)
+        cache = init_paged_cache(
+            self.cfg, K, self.max_len, self.block_size, self.kv_blocks,
+            self.cache_dtype,
+        )
         slot_state: list[_SlotState | None] = [None] * K
         next_tok = np.zeros((K,), np.int32)
         active = np.zeros((K,), bool)
         results: dict[int, RequestResult] = {}
+        deferred: Request | None = None  # ready but pool-starved
+        trace: list | None = [] if self.collect_trace else None
         t0 = time.monotonic()
         decode_steps = 0
         generated = 0
@@ -399,72 +533,110 @@ class ServeLoop:
             return time.monotonic() - t0
 
         while len(results) < len(requests):
-            # admit: fill every free slot with a ready request (prefill +
-            # scatter); a request finished by its very first token never
-            # occupies a slot, so the same slot retries the queue
+            # 1. admit: bind ready requests to free lanes, eagerly
+            # allocating their full KV block need; a pool-starved
+            # request waits (FIFO-first) for a retirement
             for k in range(K):
-                while slot_state[k] is None:
-                    r = queue.pop_ready(now())
-                    if r is None:
-                        break
-                    s = len(r.tokens)
-                    bucket = self._bucket_for(s)
-                    toks = np.zeros((1, bucket), np.int32)
-                    toks[0, :s] = np.asarray(r.tokens, np.int32)
-                    logits, states = self._prefill(
-                        self.params, jnp.asarray(toks), jnp.int32(s),
-                        self.programmed,
-                    )
+                if slot_state[k] is not None:
+                    continue
+                r = deferred if deferred is not None else queue.pop_ready(
+                    now()
+                )
+                deferred = None
+                if r is None:
+                    break
+                blocks = self._alloc_blocks(self._blocks_needed(r))
+                if blocks is None:
+                    deferred = r
+                    break
+                bt_row = np.zeros((self.blocks_per_slot,), np.int32)
+                bt_row[: len(blocks)] = blocks
+                cache = self._admit(
+                    cache, jnp.int32(k), jnp.asarray(bt_row)
+                )
+                slot_state[k] = _SlotState(
+                    request=r,
+                    admit_time=now(),
+                    blocks=blocks,
+                    logits=[] if self.collect_logits else None,
+                )
+                active[k] = False
+
+            # 2. one prefill chunk per still-prefilling lane — admission
+            # work is spread so it never stalls the decode step below
+            chunks_run = 0
+            for k in range(K):
+                st = slot_state[k]
+                if st is None or active[k]:
+                    continue
+                r = st.request
+                plen = len(r.tokens)
+                clen = self.prefill_chunk or self._bucket_for(plen)
+                start = st.prefill_pos
+                nv = min(clen, plen - start)
+                toks = np.zeros((clen,), np.int32)
+                toks[:nv] = np.asarray(r.tokens[start:start + nv], np.int32)
+                logits, cache = self._chunk(
+                    self.params, cache, jnp.asarray(toks), jnp.int32(k),
+                    jnp.int32(start), jnp.int32(nv),
+                    jnp.bool_(start + nv >= plen), self.programmed,
+                )
+                st.prefill_pos = start + nv
+                chunks_run += 1
+                if st.prefill_pos >= plen:  # final chunk → first token
                     t_first = int(jnp.argmax(logits[0]))
-                    st = _SlotState(
-                        request=r,
-                        admit_time=now(),
-                        logits=[] if self.collect_logits else None,
-                    )
+                    st.first_token_time = now()
                     generated += 1
                     if self._emit(st, t_first, logits[0]):
                         results[r.rid] = self._result(st, now())
-                        continue
-                    cache = self._pack(
-                        cache, states, jnp.int32(k), jnp.int32(s)
-                    )
-                    slot_state[k] = st
-                    next_tok[k] = t_first
-                    active[k] = True
+                        self._release_blocks(st.blocks)
+                        slot_state[k] = None
+                    else:
+                        next_tok[k] = t_first
+                        active[k] = True
 
-            if not active.any():
+            # 3. slot-parallel decode over the active lanes
+            decoded = int(active.sum())
+            if decoded:
+                logits, toks, cache = self._decode(
+                    self.params, cache, jnp.asarray(next_tok),
+                    self.programmed, jnp.asarray(active),
+                )
+                decode_steps += 1
+                occupancy += decoded
+                toks_np = np.asarray(toks)
+                logits_np = (
+                    np.asarray(logits) if self.collect_logits else None
+                )
+                for k in range(K):
+                    if not active[k]:
+                        continue
+                    st = slot_state[k]
+                    st.decode_steps += 1
+                    generated += 1
+                    t = int(toks_np[k])
+                    row = logits_np[k] if logits_np is not None else None
+                    if self._emit(st, t, row):
+                        results[st.request.rid] = self._result(st, now())
+                        self._release_blocks(st.blocks)
+                        slot_state[k] = None
+                        active[k] = False
+                    else:
+                        next_tok[k] = t
+            elif chunks_run == 0:
                 if len(results) == len(requests):
                     break
+                if deferred is not None:
+                    continue  # retirement freed blocks; re-admit now
                 nxt = queue.next_arrival()
                 if nxt is None:  # pragma: no cover - defensive
                     break
                 wait = nxt - now()
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
-                continue
 
-            logits, toks, cache = self._decode(
-                self.params, cache, jnp.asarray(next_tok),
-                self.programmed, jnp.asarray(active),
-            )
-            decode_steps += 1
-            occupancy += int(active.sum())
-            toks_np = np.asarray(toks)
-            logits_np = np.asarray(logits) if self.collect_logits else None
-            for k in range(K):
-                if not active[k]:
-                    continue
-                st = slot_state[k]
-                st.decode_steps += 1
-                generated += 1
-                t = int(toks_np[k])
-                row = logits_np[k] if logits_np is not None else None
-                if self._emit(st, t, row):
-                    results[st.request.rid] = self._result(st, now())
-                    slot_state[k] = None
-                    active[k] = False
-                else:
-                    next_tok[k] = t
+            if trace is not None:
+                trace.append({"chunks": chunks_run, "decoded": decoded})
 
         wall = now()
         ordered = [results[r.rid] for r in requests]
@@ -476,4 +648,7 @@ class ServeLoop:
             occupancy=(
                 occupancy / (decode_steps * K) if decode_steps else 0.0
             ),
+            kv_blocks=self.kv_blocks,
+            kv_blocks_reused=self.blocks_reused,
+            trace=trace,
         )

@@ -1,11 +1,13 @@
-"""Serving: prefill (build cache + first logits) and decode steps.
+"""Serving: prefill (single-shot or chunked) and decode steps.
 
 ``prefill_32k`` lowers ``prefill_step``; ``decode_32k`` / ``long_500k``
 lower ``decode_step`` (one new token against a KV cache of seq_len, the
 cache's KV-length axis sharded over the ``model`` mesh axis =
-flash-decode).  Programming noise is *static* across decode steps
-(devices are programmed once for inference) — keys derive from layer
-names only.
+flash-decode); ``make_chunk_prefill`` is the continuous-batching
+engine's prefill — one fixed-size prompt chunk at a time against the
+paged arena (DESIGN.md §7).  Programming noise is *static* across
+decode steps (devices are programmed once for inference) — keys derive
+from layer names only.
 
 Weight-stationary serving (DESIGN.md §5): ``greedy_generate`` programs
 the model ONCE via :func:`repro.models.program_params` and passes the
@@ -34,11 +36,17 @@ from repro.distributed.sharding import rules_context
 from repro.models import decode_step as model_decode
 from repro.models import forward, program_params
 from repro.models.config import ArchConfig
-from repro.models.model import DIGITAL, init_cache, segments
+from repro.models.model import (
+    DIGITAL,
+    init_cache,
+    prefill_chunk_step,
+    segments,
+)
 
 __all__ = [
     "make_prefill_step",
     "make_slot_prefill",
+    "make_chunk_prefill",
     "make_decode_step",
     "greedy_generate",
 ]
@@ -46,7 +54,8 @@ __all__ = [
 
 def _head_logits(params, hidden, *, policy, rng, programmed):
     """Route hidden states through the (possibly analog) lm_head — the
-    single head semantics every prefill/decode path shares."""
+    single head semantics every prefill/decode path shares (bitwise the
+    same head math for the first token as for every decoded token)."""
     from repro.models.common import dense, pget
 
     return dense(
@@ -95,6 +104,16 @@ def make_prefill_step(
     cache_dtype=jnp.bfloat16,
     remat: bool = True,
 ):
+    """Lockstep-batch prefill: build the DENSE serving cache (padded to
+    ``max_len``) plus first-token logits for a whole batch at once —
+    the ``greedy_generate`` / dry-run path (the continuous-batching
+    engine prefills through :func:`make_chunk_prefill` instead).
+
+    Numerics contract: first-token logits route through the same
+    (possibly analog) lm_head as every decode step, and programming
+    noise is keyed statically (PRNGKey(0)) so reuse of a programmed
+    pytree is bitwise identical to re-programming per call
+    (DESIGN.md §5)."""
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
 
@@ -127,7 +146,7 @@ def make_slot_prefill(
     cache_dtype=jnp.bfloat16,
     remat: bool = True,
 ):
-    """Slot-addressable prefill for continuous batching (DESIGN.md §7).
+    """Single-request bucket-padded prefill (dense layout).
 
     The returned function prefills ONE request whose prompt is padded to
     a static bucket length and returns
@@ -135,14 +154,19 @@ def make_slot_prefill(
       * logits at the request's LAST REAL token (``prompt_len - 1`` —
         a traced index, so one compile serves every prompt length that
         shares a bucket), and
-      * the per-layer serving states at bucket length (NOT padded to the
-        arena's ``max_len``) for :mod:`repro.serve.batching` to scatter
-        into a free slot.
+      * the per-layer serving states at bucket length.
 
-    Right-padding is invisible to the real positions: attention is
-    causal (padded keys sit strictly after every real query) and the DPE
-    input pipeline quantises per row, so a padded prefill computes the
-    same numbers for the real tokens as an exact-length one.
+    The continuous-batching engine now prefills through
+    :func:`make_chunk_prefill` (paged arena, DESIGN.md §7); this
+    function is retained as the dense single-shot reference — its
+    numerics are the oracle the chunked path's chunk-size invariance is
+    argued against.
+
+    Numerics contract: right-padding is invisible to the real positions
+    — attention is causal (padded keys sit strictly after every real
+    query) and the DPE input pipeline quantises per row, so a padded
+    prefill computes bitwise the same numbers for the real tokens as an
+    exact-length one on the fast path.
     """
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
@@ -166,12 +190,57 @@ def make_slot_prefill(
     return slot_prefill
 
 
+def make_chunk_prefill(
+    cfg: ArchConfig,
+    policy: MemPolicy | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+):
+    """Chunked prefill against the paged arena (DESIGN.md §7).
+
+    The returned function runs ONE fixed-size chunk of ONE request's
+    prompt through the model, writing its K/V into the slot's blocks,
+    and returns the updated cache plus logits at the chunk's last real
+    token — the request's first-token logits when ``final`` is True;
+    non-final chunks skip the vocab head entirely and return zeros.
+    One compile serves every ``(chunk_len,)`` shape — slot, start
+    offset, valid-token count and finality are traced.
+
+    Numerics contract (tests/test_batching.py): fast-path logits are
+    BITWISE identical across chunk sizes and block-table layouts; the
+    faithful row-independent engine agrees to GEMM-kernel rounding with
+    tokens equal — the same tolerance classes as the decode-path
+    batched==solo contract.
+    """
+    policy = policy or DIGITAL
+    rng = jax.random.PRNGKey(0)  # static programming noise for serving
+
+    def chunk_fn(
+        params, cache, tokens, slot, start, n_valid, final,
+        programmed=None,
+    ):
+        """tokens: (C,) right-padded chunk; slot/start/n_valid: () int32;
+        final: () bool — non-final chunks skip the vocab head."""
+        return prefill_chunk_step(
+            params, cfg, cache, tokens, slot, start, n_valid, final,
+            policy=policy, rng=rng, compute_dtype=compute_dtype,
+            programmed=programmed,
+        )
+
+    return chunk_fn
+
+
 def make_decode_step(
     cfg: ArchConfig,
     policy: MemPolicy | None = None,
     *,
     compute_dtype=jnp.bfloat16,
 ):
+    """Slot-parallel decode step (dense or paged cache, detected from
+    the cache pytree).  Numerics contract: per-row computations are
+    independent — with a row-independent policy the fast path is bitwise
+    identical across packings, the faithful path agrees to GEMM-kernel
+    rounding across batch extents with tokens equal (DESIGN.md §7)."""
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)
 

@@ -10,6 +10,18 @@ Contract under test:
 * **Packing is invisible, bitwise (fast path).**  Per-step logits of a
   request are bit-identical across slot counts, and a slot refill
   mid-stream does not perturb a neighbour's logits by a single bit.
+* **Chunking is invisible, bitwise (fast path).**  Splitting a prompt's
+  prefill into fixed-size chunks interleaved with decode steps changes
+  not a single logit bit for any chunk size — including vs the
+  unchunked single-bucket prefill.
+* **Paged layout is invisible; freed blocks are reusable.**  The block
+  pool with per-slot block tables produces the same tokens as solo
+  decode, blocks freed by retired requests are re-allocated to later
+  ones without KV leakage, and a pool smaller than ``slots``' worth of
+  arena defers admission instead of corrupting state.
+* **Long prompts never starve decode lanes.**  While a long prompt
+  prefills chunk-by-chunk, active lanes decode in every iteration
+  (trace-based assertion).
 * **Stopping never leaks.**  EOS and max-token stopping cut the stream
   at exactly the stop position.
 * **Sharded programmed state** (slow, 8 forced host devices): the same
@@ -33,7 +45,12 @@ from repro.configs import get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.models import init_params, program_params
-from repro.serve import Request, ServeLoop, greedy_generate
+from repro.serve import (
+    Request,
+    ServeLoop,
+    greedy_generate,
+    make_slot_prefill,
+)
 
 INT8 = spec("int8")
 FAST = DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
@@ -203,6 +220,130 @@ def test_eos_and_max_tokens_never_leak(model, programmed):
     assert one.results[0].decode_steps == 0
 
 
+def test_chunked_prefill_bitwise_across_chunk_sizes(model, programmed):
+    """Fast path: logits are BIT-identical whether a prompt's prefill
+    runs as one bucket-padded chunk (prefill_chunk=None) or as 3/4/8
+    token chunks interleaved with decode steps — chunking moves
+    scheduling, never arithmetic — tokens equal solo greedy, and the
+    first-token logits match the dense single-shot ``make_slot_prefill``
+    oracle bitwise."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    workload = [(4, 5), (20, 4), (7, 3), (12, 2)]  # includes a long prompt
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l, _ in workload
+    ]
+    reqs = lambda: _requests(prompts, workload)
+    runs = {}
+    for chunk in (None, 3, 4, 8):
+        loop = ServeLoop(
+            params, cfg, policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
+            prefill_chunk=chunk, block_size=8,
+            compute_dtype=jnp.float32, programmed=programmed["fast"],
+            collect_logits=True,
+        )
+        runs[chunk] = loop.run(reqs()).results
+    for chunk in (3, 4, 8):
+        for a, b in zip(runs[None], runs[chunk]):
+            assert a.tokens == b.tokens, (chunk, a.rid)
+            assert len(a.logits) == len(b.logits)
+            for x, y in zip(a.logits, b.logits):
+                assert np.array_equal(x, y), (chunk, a.rid)
+    for res, p, (_, m) in zip(runs[4], prompts, workload):
+        ref = greedy_generate(
+            params, cfg, jnp.asarray(p)[None], m - 1,
+            policy=POLICIES["fast"], compute_dtype=jnp.float32,
+            programmed=programmed["fast"], max_len=MAX_LEN,
+        )
+        assert res.tokens == list(np.asarray(ref[0]))
+    # the dense single-shot slot prefill is the chunked path's oracle:
+    # a prompt's first-token logits agree bitwise for every chunking
+    slot_fn = jax.jit(make_slot_prefill(
+        cfg, POLICIES["fast"], compute_dtype=jnp.float32,
+        cache_dtype=jnp.float32,
+    ))
+    buckets = ServeLoop(
+        params, cfg, policy=POLICIES["fast"], slots=1, max_len=MAX_LEN,
+        compute_dtype=jnp.float32, programmed=programmed["fast"],
+    ).buckets
+    for res, p in zip(runs[4], prompts):
+        s = len(p)
+        bucket = next(b for b in buckets if b >= s)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = p
+        oracle, _ = slot_fn(
+            params, jnp.asarray(toks), jnp.int32(s), programmed["fast"]
+        )
+        assert np.array_equal(np.asarray(oracle[0]), res.logits[0])
+
+
+def test_long_prompt_admission_never_starves_decode(model, programmed):
+    """While a long prompt prefills chunk-by-chunk, an already-active
+    lane must decode in EVERY iteration — chunked admission bounds the
+    work between decode steps, so a long prompt cannot stall its
+    neighbours (the scheduler trace pins this deterministically)."""
+    cfg, params = model
+    rng = np.random.default_rng(11)
+    short = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    long_p = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+    loop = ServeLoop(
+        params, cfg, policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
+        prefill_chunk=4, block_size=8, compute_dtype=jnp.float32,
+        programmed=programmed["fast"], collect_trace=True,
+    )
+    rep = loop.run([
+        Request(rid=0, tokens=short, max_new_tokens=20),  # active lane
+        Request(rid=1, tokens=long_p, max_new_tokens=4),  # 6-chunk prefill
+    ])
+    trace = rep.trace
+    assert trace is not None and len(trace) >= 6
+    # iteration 0 prefills both first chunks (nothing active yet); from
+    # then on, every iteration that still ran prefill chunks for the
+    # long prompt must also have decoded the short request's lane
+    prefill_iters = [t for t in trace[1:] if t["chunks"] > 0]
+    assert len(prefill_iters) >= 4, "long prompt should span iterations"
+    assert all(t["decoded"] >= 1 for t in prefill_iters), (
+        f"decode starved during chunked admission: {trace}"
+    )
+    # and the long request still decodes exactly the solo tokens
+    ref = greedy_generate(
+        params, cfg, jnp.asarray(long_p)[None], 3, policy=POLICIES["fast"],
+        compute_dtype=jnp.float32, programmed=programmed["fast"],
+        max_len=MAX_LEN,
+    )
+    assert rep.results[1].tokens == list(np.asarray(ref[0]))
+
+
+def test_paged_pool_reuses_freed_blocks_without_leakage(model, programmed):
+    """A block pool smaller than slots x blocks_per_slot forces real
+    paging: admission defers until a retirement frees blocks, freed
+    blocks are re-allocated to later requests, and every request still
+    emits exactly its solo tokens — reuse never leaks a stranger's KV."""
+    cfg, params = model
+    rng = np.random.default_rng(13)
+    workload = [(16, 8)] * 6  # 23 KV positions -> 3 blocks each (bs=8)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l, _ in workload
+    ]
+    loop = ServeLoop(
+        params, cfg, policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
+        prefill_chunk=8, block_size=8, kv_blocks=7,  # 6 usable: 2 lanes
+        compute_dtype=jnp.float32, programmed=programmed["fast"],
+    )
+    rep = loop.run(_requests(prompts, workload))
+    assert rep.kv_blocks_reused > 0, "pool pressure should force reuse"
+    for res, p, (_, m) in zip(rep.results, prompts, workload):
+        ref = greedy_generate(
+            params, cfg, jnp.asarray(p)[None], m - 1,
+            policy=POLICIES["fast"], compute_dtype=jnp.float32,
+            programmed=programmed["fast"], max_len=MAX_LEN,
+        )
+        assert res.tokens == list(np.asarray(ref[0])), f"rid {res.rid}"
+        assert res.finish_reason == "length"
+
+
 def test_rejects_unsupported_and_coupled(model):
     """Recurrent-state families need exact-length prefill; batch-coupled
     faithful ADC ranging would make a request decode differently next to
@@ -231,6 +372,17 @@ def test_rejects_unsupported_and_coupled(model):
     with pytest.raises(ValueError, match="exceeds max_len"):
         loop.run(
             [Request(rid=0, tokens=np.zeros(10, np.int32),
+                     max_new_tokens=10)]
+        )
+    # a request whose KV need exceeds the whole block pool can never be
+    # admitted — refused up front, not deadlocked
+    tiny = ServeLoop(
+        params, cfg, slots=1, max_len=32, block_size=8, kv_blocks=3,
+        compute_dtype=jnp.float32,
+    )
+    with pytest.raises(ValueError, match="KV[ ]?blocks|blocks but the pool"):
+        tiny.run(
+            [Request(rid=0, tokens=np.zeros(20, np.int32),
                      max_new_tokens=10)]
         )
     with pytest.raises(ValueError, match="unique"):

@@ -1,0 +1,60 @@
+"""Docs link checker: verify that every RELATIVE markdown link in the
+given files resolves to an existing file or directory.
+
+    python tools/check_doc_links.py README.md DESIGN.md ...
+
+External links (http/https/mailto) and pure in-page anchors (#...) are
+skipped; a relative target's fragment (FILE.md#section) is stripped
+before the existence check.  Exit code 1 lists every broken link — CI
+runs this in the docs job so README/DESIGN references cannot rot.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excludes images handled identically and ignores
+# targets containing spaces-with-title syntax ("target "title"")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            line = text[: m.start()].count("\n") + 1
+            errors.append(f"{path}:{line}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_doc_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"{len(errors)} broken link(s)")
+        return 1
+    print(f"all relative links resolve across {len(argv)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
