@@ -23,6 +23,11 @@ the same process on the same shape:
   of short requests under a mixed short/long Poisson workload,
   unchunked / chunked prefill (a drop means chunked admission stopped
   bounding the head-of-line blocking of a long prompt's prefill).
+* ``dpe_kernel.*`` / ``paged_attention.*`` — the Pallas serving-kernel
+  contract: deterministic bitwise/ulp agreement indicators (1.0 = holds)
+  plus two analytic traffic ratios (staged/fused HBM bytes per GEMM,
+  gather/kernel KV blocks touched per decode step).  These are exact by
+  construction, so any drop is a real contract break, not runner noise.
 
 A check fails when ``new < baseline / factor``; the default 2.5x bound is
 deliberately loose for the noisy shared CI runner.  Both JSONs are printed
@@ -54,6 +59,23 @@ CHECKS = (
     # a drop means long-prompt admission re-acquired the loop-blocking
     # behaviour chunking exists to bound (serve/batching.py)
     ("serve_chunked ttft", "serve_chunked.ttft_p95_short_improvement"),
+    # Pallas serving kernels (deterministic indicators — interpret-mode
+    # wall time is meaningless on the CPU runner, so the gate pins the
+    # numerics contract and the analytic traffic wins instead):
+    # fp specs bitwise fused==staged (1.0), int specs within 8 ulp
+    # (1.0), staged/fused input-side HBM bytes per GEMM call, decode +
+    # chunk paged-attention kernels bitwise vs the dense gather (1.0),
+    # and gather-vs-kernel blocks touched per decode step at the widest
+    # arena (the O(max_len) -> O(prefix) win)
+    ("dpe_kernel fused fp bitwise", "dpe_kernel.fused_matches_staged_fp"),
+    ("dpe_kernel fused int 8ulp", "dpe_kernel.fused_matches_staged_int_8ulp"),
+    ("dpe_kernel hbm traffic", "dpe_kernel.hbm_input_ratio_staged_vs_fused"),
+    ("paged_attention decode bitwise",
+     "paged_attention.decode_bitwise_vs_gather"),
+    ("paged_attention chunk bitwise",
+     "paged_attention.chunk_bitwise_vs_gather_valid"),
+    ("paged_attention blocks touched",
+     "paged_attention.gather_blocks_over_kernel_blocks"),
 )
 
 

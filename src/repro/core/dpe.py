@@ -471,20 +471,21 @@ def _circuit_matmul(
 def resolve_backend(cfg: DPEConfig) -> str:
     """Concrete backend for ``cfg`` (resolves ``"auto"``).
 
-    Auto-selection rule: the fused Pallas kernel wins only where it
-    compiles to real TPU hardware; everywhere else (CPU/GPU) it would run
-    in interpret mode — orders of magnitude slower than the vectorized
-    XLA engine — so ``auto`` picks ``pallas`` iff
-    ``jax.default_backend() == "tpu"`` and the mode is ``faithful``
-    (fast/digital modes never touch the slice-pair kernel).
+    Auto-selection rule: ``auto`` picks ``pallas`` iff the mode is
+    ``faithful`` (fast/digital modes never touch the slice-pair kernel)
+    and :func:`repro.kernels.ops.kernels_enabled` says the kernels are
+    live — real TPU hardware, or a forced interpret override (the CPU-CI
+    kernel legs), so CPU CI and TPU runs share ONE selection path.  All
+    faithful ADC modes are kernel-eligible: ``dynamic_row`` ranges per
+    row over the bit-line axis, which is m-tiling independent, so the
+    kernel reproduces the XLA engine's row-independent semantics exactly
+    (DESIGN.md §3/§7).
     """
     if cfg.backend != "auto":
         return cfg.backend
-    if (
-        cfg.mode == "faithful"
-        and cfg.adc_mode != "dynamic_row"  # kernel ranges per bm-tile
-        and jax.default_backend() == "tpu"
-    ):
+    from repro.kernels import ops as _kops
+
+    if cfg.mode == "faithful" and _kops.kernels_enabled():
         return "pallas"
     return "xla"
 
@@ -499,18 +500,23 @@ def dpe_matmul_prepared(
     lead = x.shape[:-1]
     k = x.shape[-1]
     xm = x.reshape(-1, k)
-    xs, sx = prepare_input(xm, cfg)
     backend = resolve_backend(cfg)
-    if backend == "circuit":
-        y = _circuit_matmul(xs, sx, pw.slices, pw.scale, cfg)
-    elif backend == "pallas" and cfg.mode == "faithful":
+    if backend == "pallas" and cfg.mode == "faithful":
+        # fused kernel: prepare_input (quantise + slice + DAC) runs
+        # IN-kernel on the raw activations — the (Sx, M, Kp) slice
+        # stack never touches HBM on the serve hot path
         from repro.kernels import ops as _kops
 
-        y = _kops.sliced_matmul(
-            xs, sx, pw.slices, pw.scale,
+        y = _kops.fused_sliced_matmul(
+            xm.astype(jnp.float32), pw.slices, pw.scale,
             input_spec=cfg.input_spec, weight_spec=cfg.weight_spec,
-            array_size=cfg.array_size, radc=cfg.radc, adc_mode=cfg.adc_mode,
+            array_size=cfg.array_size, rdac=cfg.rdac, radc=cfg.radc,
+            adc_mode=cfg.adc_mode,
         )
+        return y[:, :n].reshape(*lead, n)
+    xs, sx = prepare_input(xm, cfg)
+    if backend == "circuit":
+        y = _circuit_matmul(xs, sx, pw.slices, pw.scale, cfg)
     elif cfg.mode == "faithful":
         y = _faithful_matmul(xs, sx, pw.slices, pw.scale, cfg)
     else:

@@ -1,0 +1,286 @@
+"""Pallas paged-attention kernels for the serving hot paths.
+
+The XLA paged path (``models/attention.py``) materialises the FULL
+logical view of a slot's KV — ``_paged_gather`` indexes the block pool
+with the whole (nb,) block table, so one decode step or one prefill
+chunk costs O(max_len) HBM gather traffic regardless of how short the
+prefix is.  These kernels instead walk the block table in-kernel
+(vLLM-style): the table and the per-slot positions are scalar-prefetched
+so the BlockSpec index maps can fetch exactly the *mapped* pool blocks,
+and every grid step past the prefix limit clamps its index map to the
+last mapped block — Mosaic elides the repeated DMA, so HBM traffic is
+O(prefix), not O(max_len).
+
+Numerics contract (tests/test_paged_attention.py): the kernels are
+BITWISE equal to the dense-gather path in interpret mode.  Mapped
+blocks are copied into a full-S VMEM scratch (unmapped tail left zero),
+and the final grid step replays the exact jnp expression sequence of
+``attention_decode`` / ``attention_dense`` on that scratch.  Tail and
+trash positions hold zeros here vs. junk in the gathered view, but both
+are masked to -1e30 before the softmax, ``exp`` underflows to exactly
+0.0, and a 0.0 probability contributes exactly 0.0 to the PV
+contraction either way — so the difference is value-invisible.
+
+The attention math is intentionally REPLICATED here rather than
+imported from ``models.attention`` (which would be an import cycle);
+the differential tests pin the two copies together.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
+
+__all__ = ["paged_decode_attention", "paged_chunk_attention"]
+
+_NEG = -1e30  # models.attention._NEG
+
+
+def _decode_kernel(
+    # scalar prefetch
+    bt_ref,  # (B, nb) int32 block tables
+    pos_ref,  # (B,) int32 current token index per slot
+    # inputs
+    q_ref,  # (1, H, dh) this slot's query
+    kb_ref,  # (1, bs, KV, hd) the mapped K pool block for this step
+    vb_ref,  # (1, bs, KV, hd)
+    # outputs
+    out_ref,  # (1, H, dh) pool dtype (attention_decode returns v.dtype)
+    # scratch
+    ks_ref,  # (S, KV, hd) pool dtype — full logical K view
+    vs_ref,  # (S, KV, hd)
+    *,
+    bs: int,
+    nb: int,
+    window: int,
+):
+    b = pl.program_id(0)
+    kb = pl.program_id(1)
+    pos = pos_ref[b]
+    lim = pos // bs  # last logical block holding a valid key (ki <= pos)
+
+    @pl.when(kb == 0)
+    def _zero():
+        ks_ref[...] = jnp.zeros_like(ks_ref)
+        vs_ref[...] = jnp.zeros_like(vs_ref)
+
+    @pl.when(kb <= lim)
+    def _copy():
+        ks_ref[pl.ds(kb * bs, bs)] = kb_ref[0]
+        vs_ref[pl.ds(kb * bs, bs)] = vb_ref[0]
+
+    @pl.when(kb == nb - 1)
+    def _attend():
+        # exact replica of attention_decode on the (S, KV, hd) scratch
+        h, dh = q_ref.shape[1], q_ref.shape[2]
+        kvh = ks_ref.shape[1]
+        g = h // kvh
+        scale = dh**-0.5
+        k = ks_ref[...]
+        v = vs_ref[...]
+        qg = q_ref[0].reshape(kvh, g, dh)
+        s = (
+            jnp.einsum(
+                "kgd,skd->kgs",
+                qg.astype(k.dtype),
+                k,
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )
+        ki = jnp.arange(nb * bs)[None, None, :]
+        mask = ki <= pos
+        if window > 0:
+            mask &= ki > pos - window
+        s = jnp.where(mask, s, _NEG)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("kgs,skd->kgd", (p / l).astype(v.dtype), v)
+        out_ref[0] = o.reshape(h, dh)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret")
+)
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    pool_k: jax.Array,  # (n_blocks, bs, KV, hd)
+    pool_v: jax.Array,  # (n_blocks, bs, KV, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    pos: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token paged attention: bitwise ``attention_decode`` over the
+    gathered logical view, reading only the mapped prefix blocks."""
+    bsz, nb = pool_k.shape[1], block_tables.shape[1]
+    b, h, dh = q.shape
+
+    def q_map(i, kb, bt, p):
+        return (i, 0, 0)
+
+    def kv_map(i, kb, bt, p):
+        # clamp beyond-limit steps to the last mapped block: the index
+        # map then repeats, Mosaic elides the DMA, and pl.when skips the
+        # copy — beyond-prefix blocks cost no HBM traffic.
+        return (bt[i, jnp.minimum(kb, p[i] // bsz)], 0, 0, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, bs=bsz, nb=nb, window=window
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), q_map),
+            pl.BlockSpec((1, bsz) + pool_k.shape[2:], kv_map),
+            pl.BlockSpec((1, bsz) + pool_v.shape[2:], kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((nb * bsz,) + pool_k.shape[2:], pool_k.dtype),
+            pltpu.VMEM((nb * bsz,) + pool_v.shape[2:], pool_v.dtype),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), pool_v.dtype),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), q, pool_k, pool_v)
+
+
+def _chunk_kernel(
+    # scalar prefetch
+    bt_ref,  # (nb,) int32 this slot's block table
+    lim_ref,  # (1,) int32 last logical block the chunk touches
+    start_ref,  # (1,) int32 logical position of the chunk's first token
+    # inputs
+    q_ref,  # (C, H, dh) chunk queries
+    kb_ref,  # (1, bs, KV, hd)
+    vb_ref,  # (1, bs, KV, hd)
+    # outputs
+    out_ref,  # (C, H, dh)
+    # scratch
+    ks_ref,  # (S, KV, hd)
+    vs_ref,  # (S, KV, hd)
+    *,
+    bs: int,
+    nb: int,
+    window: int,
+):
+    kb = pl.program_id(0)
+    lim = lim_ref[0]
+    start = start_ref[0]
+
+    @pl.when(kb == 0)
+    def _zero():
+        ks_ref[...] = jnp.zeros_like(ks_ref)
+        vs_ref[...] = jnp.zeros_like(vs_ref)
+
+    @pl.when(kb <= lim)
+    def _copy():
+        ks_ref[pl.ds(kb * bs, bs)] = kb_ref[0]
+        vs_ref[pl.ds(kb * bs, bs)] = vb_ref[0]
+
+    @pl.when(kb == nb - 1)
+    def _attend():
+        # exact replica of attention_dense on the (S, KV, hd) scratch
+        c, h, dh = q_ref.shape
+        kvh = ks_ref.shape[1]
+        g = h // kvh
+        scale = dh**-0.5
+        k = ks_ref[...]
+        v = vs_ref[...]
+        qg = q_ref[...].reshape(c, kvh, g, dh)
+        # _gqa_scores: no preferred_element_type — dtype promotion rules
+        # must match the dense path exactly
+        s = jnp.einsum("qkgd,skd->kgqs", qg, k).astype(jnp.float32) * scale
+        qi = start + jnp.arange(c)[:, None]
+        ki = jnp.arange(nb * bs)[None, :]
+        mask = ki <= qi
+        if window > 0:
+            mask &= ki > qi - window
+        s = jnp.where(mask[None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("kgqs,skd->qkgd", p.astype(v.dtype), v)
+        out_ref[...] = o.reshape(c, h, dh)
+
+
+def paged_chunk_attention(
+    q: jax.Array,  # (1, C, H, dh) chunk queries (batch of one slot)
+    pool_k: jax.Array,  # (n_blocks, bs, KV, hd)
+    pool_v: jax.Array,
+    bt_row: jax.Array,  # (nb,) int32
+    start: jax.Array,  # scalar int32 logical position of first token
+    n_valid: jax.Array,  # scalar int32 valid tokens in the chunk
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunk-prefill paged attention: bitwise ``attention_dense`` over
+    the gathered logical view, reading only blocks 0..ceil((start+C)/bs)
+    — chunk cost is O(prefix), not O(max_len)."""
+    _, c, h, dh = q.shape
+    bsz, nb = pool_k.shape[1], bt_row.shape[0]
+    # last block the chunk's causal view can reach: its final VALID
+    # token sits at logical position start + n_valid - 1.  (Pad queries
+    # past n_valid attend over a zero tail here vs junk on the dense
+    # path — their outputs are discarded by the caller either way.)
+    last = jnp.maximum(start + n_valid - 1, 0)
+    lim = jnp.minimum(last // bsz, nb - 1).astype(jnp.int32)
+    return _paged_chunk_call(
+        q[0],
+        pool_k,
+        pool_v,
+        bt_row.astype(jnp.int32),
+        lim[None],
+        jnp.asarray(start, jnp.int32)[None],
+        window=window,
+        interpret=interpret,
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_chunk_call(
+    q, pool_k, pool_v, bt_row, lim, start, *, window, interpret
+):
+    c, h, dh = q.shape
+    bsz, nb = pool_k.shape[1], bt_row.shape[0]
+
+    def q_map(kb, bt, lim, st):
+        return (0, 0, 0)
+
+    def kv_map(kb, bt, lim, st):
+        return (bt[jnp.minimum(kb, lim[0])], 0, 0, 0)
+
+    kernel = functools.partial(_chunk_kernel, bs=bsz, nb=nb, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, h, dh), q_map),
+            pl.BlockSpec((1, bsz) + pool_k.shape[2:], kv_map),
+            pl.BlockSpec((1, bsz) + pool_v.shape[2:], kv_map),
+        ],
+        out_specs=pl.BlockSpec((c, h, dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((nb * bsz,) + pool_k.shape[2:], pool_k.dtype),
+            pltpu.VMEM((nb * bsz,) + pool_v.shape[2:], pool_v.dtype),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, h, dh), pool_v.dtype),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(bt_row, lim, start, q, pool_k, pool_v)

@@ -1,15 +1,19 @@
-"""Pure-jnp oracle for the Pallas sliced-matmul kernel.
+"""Pure-jnp oracle for the Pallas sliced-matmul kernels.
 
 Mirrors the kernel's semantics *exactly* — including the ADC dynamic-range
 granularity of per (m-tile, k-block, n-block) — so kernel vs. oracle
 comparisons are bit-meaningful.  With ``adc_mode="fullscale"`` (static
 range) the oracle is also identical to the behavioural engine path in
-``repro.core.dpe._faithful_matmul``.
+``repro.core.dpe._faithful_matmul``, and with ``adc_mode="dynamic_row"``
+(per-row range over the bit-line axis only) the granularity is m-tiling
+independent, so the oracle, the kernel and the behavioural engine all
+share one semantics.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.slicing import SliceSpec, slice_significances
 
@@ -45,29 +49,52 @@ def sliced_matmul_ref(
     wsb = ws.reshape(swn, nk, bk, nn, bn)
     sxb = sx.reshape(nm, bm, nk)
 
+    # Accumulation order mirrors the kernel EXACTLY — K-blocks outer
+    # (the kernel's innermost grid dim revisits the output tile), slice
+    # pairs inner, per-block scales applied to the per-K accumulator.
+    # ``optimization_barrier`` pins every multiply feeding an add so the
+    # XLA simplifier cannot contract it to an fma — the interpret-mode
+    # kernel pins the same sites (``sliced_matmul._pin``).  The LLVM CPU
+    # backend can still contract below HLO, but that is value-exact when
+    # the multiplier is a power of two, so the fp slice specs (pow2
+    # block scales) are bitwise vs the kernel while int specs carry a
+    # few-ulp cross-K bound (tests/test_kernel_oracle.py).
     out = jnp.zeros((nm, bm, nn, bn), jnp.float32)
-    for i in range(sxn):
-        for j in range(swn):
-            # (nm, bm, nk, bk) x (nk, bk, nn, bn) -> (nm, bm, nk, nn, bn)
-            p = jnp.einsum(
-                "mrkb,kbnc->mrknc",
-                xsb[i].astype(jnp.float32),
-                wsb[j].astype(jnp.float32),
-            )
-            if radc > 1:
-                if adc_mode == "dynamic":
-                    ymax = jnp.maximum(
-                        jnp.max(p, axis=(1, 4), keepdims=True), _EPS
-                    )
-                else:
-                    ymax = jnp.float32(
-                        bk
-                        * (2.0 ** input_spec.bits[i] - 1.0)
-                        * (2.0 ** weight_spec.bits[j] - 1.0)
-                    )
-                step = ymax / (radc - 1)
-                p = jnp.round(p / step) * step
-            # scale per (m-row, k-block) and (k-block, n-block), then sum k.
-            p = p * sxb[:, :, :, None, None] * sw[None, None, :, :, None]
-            out = out + float(sigx[i] * sigw[j]) * jnp.sum(p, axis=2)
+    for kb in range(nk):
+        acc = jnp.zeros((nm, bm, nn, bn), jnp.float32)
+        for i in range(sxn):
+            for j in range(swn):
+                # (nm, bm, bk) x (bk, nn, bn) -> (nm, bm, nn, bn)
+                p = jnp.einsum(
+                    "mrb,bnc->mrnc",
+                    xsb[i, :, :, kb].astype(jnp.float32),
+                    wsb[j, kb].astype(jnp.float32),
+                )
+                if radc > 1:
+                    if adc_mode == "dynamic":
+                        ymax = jnp.maximum(
+                            jnp.max(p, axis=(1, 3), keepdims=True), _EPS
+                        )
+                    elif adc_mode == "dynamic_row":
+                        # per-row range over the bit-line axis only —
+                        # each row of M is an independent analog read
+                        # (DESIGN.md §7)
+                        ymax = jnp.maximum(
+                            jnp.max(p, axis=(3,), keepdims=True), _EPS
+                        )
+                    else:
+                        ymax = jnp.float32(
+                            bk
+                            * (2.0 ** input_spec.bits[i] - 1.0)
+                            * (2.0 ** weight_spec.bits[j] - 1.0)
+                        )
+                    step = ymax / (radc - 1)
+                    p = jnp.round(p / step) * step
+                acc = acc + lax.optimization_barrier(
+                    jnp.float32(sigx[i] * sigw[j]) * p
+                )
+        # scale per (m-row, k-block) and (k-block, n-block).
+        out = out + lax.optimization_barrier(
+            acc * sxb[:, :, kb, None, None] * sw[None, None, kb, :, None]
+        )
     return out.reshape(m, np_)

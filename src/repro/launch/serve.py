@@ -84,7 +84,23 @@ def main(argv=None):
     ap.add_argument("--kv_blocks", type=int, default=0,
                     help="total paged-arena blocks (0 = slots x "
                          "ceil(max_len/block_size) + trash block)")
+    ap.add_argument("--kernels", default="auto",
+                    choices=("auto", "off", "interpret", "on"),
+                    help="Pallas serving kernels: auto (on iff TPU), off "
+                         "(XLA oracle paths), interpret (force the "
+                         "kernels in interpret mode — CPU CI / "
+                         "differential debugging), on (force compiled)")
     args = ap.parse_args(argv)
+    if args.kernels != "auto":
+        from repro.kernels import ops as _kops
+
+        if args.kernels == "off":
+            _kops.set_kernels_enabled(False)
+        elif args.kernels == "interpret":
+            _kops.set_interpret(True)
+        else:  # "on": compiled kernels even off-TPU (will fail on CPU)
+            _kops.set_kernels_enabled(True)
+            _kops.set_interpret(False)
     if args.shard_model > 1:
         # must land before jax initialises its backends; only affects the
         # host (CPU) platform — real accelerator device counts win

@@ -15,9 +15,20 @@ Execution paths:
   ``block_tables`` and ``chunk_attention_block`` address a *block pool*
   (``(n_blocks, block_size, KV, hd)``, shared by every serving slot)
   through per-slot block tables instead of a dense per-slot cache row.
-  Blocks are gathered into logical order before the attention math, so
-  the scores/softmax see exactly the values a dense cache would hold:
-  paged layouts are bitwise-invisible to the numerics.
+  Two implementations, selected by
+  ``repro.kernels.ops.resolve_attention_backend()``:
+
+  - ``xla`` (the oracle): blocks are gathered into logical order before
+    the attention math, so the scores/softmax see exactly the values a
+    dense cache would hold — paged layouts are bitwise-invisible to the
+    numerics.  Cost: the gather materialises the FULL ``(B, nb, bs, KV,
+    hd)`` view, O(max_len) per step however short the prefix.
+  - ``pallas`` (``repro.kernels.paged_attention``): the kernel walks the
+    block table in-kernel and reads only the mapped prefix blocks,
+    O(prefix) per step; bitwise equal to the gather path in interpret
+    mode (tests/test_paged_attention.py).  The kernel path does not
+    carry the flash-decode sharding constraints — length-sharded TPU
+    meshes should pin the ``xla`` backend.
 
 All projections route through ``dense`` (mem-policy aware).
 """
@@ -28,6 +39,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as _kops
+from repro.kernels.paged_attention import (
+    paged_chunk_attention,
+    paged_decode_attention,
+)
 
 from .common import apply_rope, dense, make_dense_params, pget, rms_norm, rope
 
@@ -425,14 +441,23 @@ def decode_attention_block(
             cache_v = jax.vmap(
                 lambda c, u, i: lax.dynamic_update_slice(c, u[None], (i, 0, 0))
             )(cache_v, v1c, pos)
-    if block_tables is not None:
-        att_k = _paged_gather(cache_k, block_tables)
-        att_v = _paged_gather(cache_v, block_tables)
+    window = cfg.swa_window if not cross else 0
+    if (
+        block_tables is not None
+        and _kops.resolve_attention_backend() == "pallas"
+    ):
+        # in-kernel block walk: only the mapped prefix blocks are read
+        out = paged_decode_attention(
+            q, cache_k, cache_v, block_tables, pos,
+            window=window, interpret=_kops.kernel_interpret(),
+        )
     else:
-        att_k, att_v = cache_k, cache_v
-    out = attention_decode(
-        q, att_k, att_v, pos, window=cfg.swa_window if not cross else 0
-    )
+        if block_tables is not None:
+            att_k = _paged_gather(cache_k, block_tables)
+            att_v = _paged_gather(cache_v, block_tables)
+        else:
+            att_k, att_v = cache_k, cache_v
+        out = attention_decode(q, att_k, att_v, pos, window=window)
     y = dense(
         p["o_proj"], out.reshape(b, nh * hd), name=f"{name}.o",
         policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),
@@ -496,9 +521,19 @@ def chunk_attention_block(
     # attend over the gathered logical view (prefix + this chunk); keys
     # past each query's position — including every pad position — are
     # masked to -inf by the causal mask inside attention_dense
-    g_k = _paged_gather(pool_k, bt_row[None])
-    g_v = _paged_gather(pool_v, bt_row[None])
-    out = attention_dense(q, g_k, g_v, q_off=start, window=cfg.swa_window)
+    if _kops.resolve_attention_backend() == "pallas":
+        # in-kernel block walk: chunk cost is O(prefix), not O(max_len).
+        # Pad queries (>= n_valid) see a zero tail instead of the stale
+        # gathered junk — their outputs are discarded by the caller, the
+        # valid rows are bitwise equal (tests/test_paged_attention.py).
+        out = paged_chunk_attention(
+            q, pool_k, pool_v, bt_row, start, n_valid,
+            window=cfg.swa_window, interpret=_kops.kernel_interpret(),
+        )
+    else:
+        g_k = _paged_gather(pool_k, bt_row[None])
+        g_v = _paged_gather(pool_v, bt_row[None])
+        out = attention_dense(q, g_k, g_v, q_off=start, window=cfg.swa_window)
     out = constrain(out, "batch", "seq", "heads", "head_dim")
     y = dense(
         p["o_proj"], out.reshape(b, c, nh * hd), name=f"{name}.o",

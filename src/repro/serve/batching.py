@@ -46,6 +46,7 @@ from jax import lax
 
 from repro.core.layers import MemPolicy
 from repro.distributed.sharding import rules_context
+from repro.kernels import ops as _kops
 from repro.models import program_params
 from repro.models.model import init_paged_cache
 
@@ -211,15 +212,33 @@ class RequestQueue:
 # ---------------------------------------------------------------------------
 
 
+def _kernel_state():
+    """Kernel-selection state the serving traces bake in at trace time.
+
+    ``resolve_attention_backend`` / ``kernel_interpret`` are consulted
+    while TRACING (models/attention.py), so a flipped backend or
+    interpret override must miss this cache — otherwise a test that
+    forces the Pallas path would silently reuse an XLA-path trace."""
+    return (
+        _kops.resolve_attention_backend(),
+        _kops.kernels_enabled(),
+        _kops.kernel_interpret(),
+    )
+
+
 @lru_cache(maxsize=None)
-def _jit_chunk(cfg, policy, compute_dtype, mesh):
+def _jit_chunk_cached(cfg, policy, compute_dtype, mesh, kernel_state):
     fn = make_chunk_prefill(cfg, policy, compute_dtype=compute_dtype)
     # donate the arena: chunk KV writes alias the previous buffer
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def _jit_chunk(cfg, policy, compute_dtype, mesh):
+    return _jit_chunk_cached(cfg, policy, compute_dtype, mesh, _kernel_state())
+
+
 @lru_cache(maxsize=None)
-def _jit_decode(cfg, policy, compute_dtype, mesh):
+def _jit_decode_cached(cfg, policy, compute_dtype, mesh, kernel_state):
     fn = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
 
     def step(params, cache, tokens, programmed, active):
@@ -228,6 +247,12 @@ def _jit_decode(cfg, policy, compute_dtype, mesh):
 
     # donate the arena: each step's KV writes alias the previous buffer
     return jax.jit(step, donate_argnums=(1,))
+
+
+def _jit_decode(cfg, policy, compute_dtype, mesh):
+    return _jit_decode_cached(
+        cfg, policy, compute_dtype, mesh, _kernel_state()
+    )
 
 
 @lru_cache(maxsize=None)

@@ -1,0 +1,332 @@
+"""Kernel <-> oracle differential harness for the faithful DPE kernels.
+
+Sweeps the staged (`sliced_matmul`) and fused (`fused_sliced_matmul`)
+Pallas kernels, run in interpret mode on CPU, against the pure-jnp
+oracle `kernels/ref.py` — which mirrors the kernel's tiling semantics
+exactly — across slice specs, ADC modes / resolutions, M/N/K remainder
+shapes, and programming noise on/off.
+
+Tolerance contract (DESIGN.md §3):
+
+| class                                    | bound                      |
+|------------------------------------------|----------------------------|
+| fp specs (pow2 block scales), noise off  | bitwise                    |
+| int specs, noise off                     | rel Fro <= 1e-6 (few ulp)  |
+| noise on (ADC .5-boundary flips)         | rel Fro <= 5e-3            |
+
+Why the split: kernel and oracle pin every multiply-feeding-an-add with
+``optimization_barrier`` (the XLA-simplifier fma class), but the LLVM
+CPU backend still contracts mul+add *below* HLO, skipping one rounding
+in the cross-K accumulation.  That contraction is value-exact when the
+multiplier is a power of two — the fp slice specs' block scales — and
+worth a few ulp otherwise (the int specs' absmax/levels scales are
+arbitrary floats).  The oracle must be JITTED for the bitwise legs:
+eager jnp rounds at every op boundary and lands in a third rounding
+sequence.
+
+When ``hypothesis`` is installed the sweep is additionally explored over
+random shapes; otherwise a deterministic grid runs, so tier-1 collection
+never depends on an optional package (same pattern as
+tests/test_batching_props.py).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import DPEConfig, spec
+from repro.core.dpe import (
+    dpe_matmul_prepared,
+    prepare_input,
+    prepare_weight,
+    resolve_backend,
+)
+from repro.kernels import ops as kops
+
+jitted_ref = jax.jit(
+    kops.sliced_matmul_ref,
+    static_argnames=(
+        "input_spec", "weight_spec", "array_size", "radc", "adc_mode", "bm",
+    ),
+)
+
+# the host prep must be JITTED too: XLA's simplifier rewrites the
+# divide-by-levels block scale into a reciprocal multiply inside jit (a
+# real 1-ulp change), and both the production path (dense() jits the
+# prep) and the fused kernel's in-kernel prep see that rewrite — eager
+# prep would land on a third rounding sequence.
+jitted_prep = jax.jit(prepare_input, static_argnums=(1,))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_cache():
+    # the sweep compiles hundreds of distinct (shape, spec, adc) XLA
+    # programs; drop them at module exit so later test files don't
+    # inherit the accumulated executable memory (full-suite runs)
+    yield
+    jax.clear_caches()
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.maximum(jnp.linalg.norm(b), 1e-30))
+
+
+def _run_case(
+    spec_name, m, k, n, *, arr=(32, 32), radc=256, adc_mode="dynamic",
+    noise=False, rdac=256, bm=32, seed=0,
+):
+    sp = spec(spec_name)
+    cfg = DPEConfig(
+        input_spec=sp, weight_spec=sp, array_size=arr, mode="faithful",
+        radc=radc, adc_mode=adc_mode, rdac=rdac,
+        noise_mode="program" if noise else "off",
+    )
+    kx, kw_, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw_, (k, n), jnp.float32)
+    pw = prepare_weight(w, cfg, kn if noise else None)
+    xs, sx = jitted_prep(x, cfg)
+
+    kw = dict(
+        input_spec=sp, weight_spec=sp, array_size=arr, radc=radc,
+        adc_mode=adc_mode,
+    )
+    pad = (-m) % bm
+    xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    sx_p = jnp.pad(sx, ((0, pad), (0, 0)))
+    y_ref = jitted_ref(xs_p, sx_p, pw.slices, pw.scale, bm=bm, **kw)[:m]
+    y_staged = kops.sliced_matmul(
+        xs, sx, pw.slices, pw.scale, bm=bm, interpret=True, **kw
+    )
+    y_fused = kops.fused_sliced_matmul(
+        x, pw.slices, pw.scale, rdac=rdac, bm=bm, interpret=True, **kw
+    )
+    return sp, y_ref, y_staged, y_fused
+
+
+def _assert_contract(sp, noise, y_ref, y_kernel, label):
+    assert y_kernel.shape == y_ref.shape
+    assert bool(jnp.isfinite(y_kernel).all()), f"{label}: non-finite output"
+    if noise:
+        assert _rel(y_kernel, y_ref) < 5e-3, label
+    elif sp.kind == "fp":
+        assert bool(jnp.array_equal(y_kernel, y_ref)), (
+            f"{label}: fp spec must be bitwise, "
+            f"maxdiff={float(jnp.abs(y_kernel - y_ref).max())}"
+        )
+    else:
+        # few-ulp cross-K accumulation skew: the bound is relative to
+        # the ACCUMULATOR magnitude (a 1-ulp rounding of the running sum
+        # can dominate a small, cancelled output element), so elementwise
+        # rtol would be the wrong shape for this contract.
+        assert _rel(y_kernel, y_ref) < 1e-6, label
+        ulp = float(jnp.abs(y_ref).max()) * np.float32(2.0) ** -23
+        maxdiff = float(jnp.abs(y_kernel - y_ref).max())
+        assert maxdiff <= 8 * ulp, f"{label}: maxdiff={maxdiff}, ulp={ulp}"
+
+
+# ---------------------------------------------------------------------------
+# deterministic grid (tier-1, minutes)
+# ---------------------------------------------------------------------------
+
+# (m, k, n): remainder-free, M remainder, K+N remainders, all remainders
+SHAPES = [(64, 64, 64), (45, 64, 32), (32, 70, 48), (45, 70, 48)]
+
+
+@pytest.mark.parametrize("spec_name", ["int8", "fp16"])
+@pytest.mark.parametrize(
+    "radc,adc_mode",
+    [(0, "dynamic"), (256, "fullscale"), (256, "dynamic"),
+     (256, "dynamic_row")],
+)
+@pytest.mark.parametrize("shape", [SHAPES[0], SHAPES[3]])
+def test_kernel_matches_oracle(spec_name, radc, adc_mode, shape):
+    m, k, n = shape
+    sp, y_ref, y_staged, y_fused = _run_case(
+        spec_name, m, k, n, radc=radc, adc_mode=adc_mode
+    )
+    label = f"{spec_name} radc={radc} {adc_mode} {shape}"
+    _assert_contract(sp, False, y_ref, y_staged, f"staged {label}")
+    _assert_contract(sp, False, y_ref, y_fused, f"fused {label}")
+
+
+@pytest.mark.parametrize("spec_name", ["int8", "bf16"])
+def test_kernel_matches_oracle_noisy(spec_name):
+    """Programming noise makes the slice values non-integral, so the
+    kernel's and the oracle's reduction orders legitimately differ and
+    ADC steps near .5 can flip — the contract drops to rel <= 5e-3."""
+    sp, y_ref, y_staged, y_fused = _run_case(
+        spec_name, 45, 70, 48, radc=256, adc_mode="dynamic_row", noise=True
+    )
+    _assert_contract(sp, True, y_ref, y_staged, f"staged noisy {spec_name}")
+    _assert_contract(sp, True, y_ref, y_fused, f"fused noisy {spec_name}")
+
+
+def test_fused_matches_staged_bitwise():
+    """The in-kernel prepare_input must be bitwise the host pipeline's.
+
+    With a single K block (K <= bk) and an ideal ADC (radc=0) every
+    partial is an exact small integer — products and adds are exact in
+    f32 whatever the backend contracts — and the one ``out += acc`` adds
+    onto exact zero.  The two kernels share every other op, so ANY
+    fused/staged difference here is a prep divergence (and an integral
+    slice difference would shift the output by whole quanta, far above
+    rounding noise)."""
+    for spec_name in ("int4", "int8", "int12", "fp16", "bf16"):
+        _, _, y_staged, y_fused = _run_case(
+            spec_name, 45, 30, 48, radc=0, adc_mode="dynamic_row"
+        )
+        assert bool(jnp.array_equal(y_staged, y_fused)), spec_name
+
+
+def test_fused_matches_staged_multiblock():
+    """Across K blocks the two kernels are separate XLA programs whose
+    backend contraction choices may differ on the cross-K accumulate —
+    same few-ulp class as the oracle contract, bitwise for fp specs."""
+    for spec_name in ("int8", "fp16", "bf16"):
+        sp, _, y_staged, y_fused = _run_case(
+            spec_name, 45, 70, 48, radc=256, adc_mode="dynamic_row"
+        )
+        _assert_contract(
+            sp, False, y_staged, y_fused, f"fused-vs-staged {spec_name}"
+        )
+
+
+def test_fused_wrapper_rejects_bad_k():
+    sp = spec("int8")
+    x = jnp.zeros((8, 100), jnp.float32)
+    ws = jnp.zeros((4, 64, 32), jnp.float32)  # Kp=64 < K=100
+    sw = jnp.ones((2, 1), jnp.float32)
+    with pytest.raises(ValueError, match="K=100"):
+        kops.fused_sliced_matmul(
+            x, ws, sw, input_spec=sp, weight_spec=sp, array_size=(32, 32),
+            rdac=256, radc=0, adc_mode="dynamic", interpret=True,
+        )
+
+
+def test_selection_path_single_source():
+    """`resolve_backend` must route through kernels_enabled(): a forced
+    interpret override flips auto-selection to the kernels (the CPU-CI
+    legs), resetting it restores the XLA engine on CPU."""
+    cfg = DPEConfig(mode="faithful", adc_mode="dynamic_row", backend="auto")
+    prev = kops.set_interpret(True)
+    try:
+        assert kops.kernels_enabled()
+        assert kops.kernel_interpret()
+        assert resolve_backend(cfg) == "pallas"
+    finally:
+        kops.set_interpret(prev)
+    if jax.default_backend() != "tpu":
+        assert resolve_backend(cfg) == "xla"
+    # the explicit enable override wins in both directions
+    prev = kops.set_kernels_enabled(False)
+    try:
+        assert resolve_backend(cfg) == "xla"
+    finally:
+        kops.set_kernels_enabled(prev)
+
+
+def _e2e_case(radc, noise, tol):
+    sp = spec("int8")
+    cfg = DPEConfig(
+        input_spec=sp, weight_spec=sp, array_size=(32, 32), mode="faithful",
+        adc_mode="dynamic_row", radc=radc, backend="auto",
+        noise_mode="program" if noise else "off",
+    )
+    x = jax.random.normal(jax.random.PRNGKey(0), (7, 70), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (70, 48), jnp.float32)
+    pw = prepare_weight(w, cfg, jax.random.PRNGKey(2) if noise else None)
+    y_xla = dpe_matmul_prepared(x, pw, 48, cfg.replace(backend="xla"))
+    prev = kops.set_interpret(True)
+    try:
+        assert resolve_backend(cfg) == "pallas"
+        y_pal = dpe_matmul_prepared(x, pw, 48, cfg)
+    finally:
+        kops.set_interpret(prev)
+    assert y_pal.shape == y_xla.shape
+    assert _rel(y_pal, y_xla) < tol, _rel(y_pal, y_xla)
+
+
+def test_dpe_matmul_prepared_kernel_route_ideal_adc():
+    """End-to-end `dpe_matmul_prepared` on the kernel route (fused, raw
+    activations in) vs the XLA engine.  With an ideal ADC the engine
+    collapses to the folded single GEMM — same linear math, different
+    association — so kernel vs engine agrees to reassociation ulps."""
+    _e2e_case(radc=0, noise=False, tol=1e-5)
+
+
+def test_dpe_matmul_prepared_kernel_route_real_adc():
+    """With a real ADC and ideal devices, integer-valued partials sit
+    EXACTLY on .5 quantisation boundaries, and the engine's reassociated
+    coefficient folding (sig*step vs round*step) legitimately flips
+    them — cross-engine agreement is only meaningful with programming
+    noise, which makes ties measure-zero (DESIGN.md §3)."""
+    _e2e_case(radc=256, noise=True, tol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# widest sweep — slow-marked (and hypothesis-driven when available)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec_name", ["int4", "int8", "int12", "fp16", "bf16"])
+@pytest.mark.parametrize("radc", [0, 64, 256])
+@pytest.mark.parametrize(
+    "adc_mode", ["fullscale", "dynamic", "dynamic_row"]
+)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_oracle_full(spec_name, radc, adc_mode, shape):
+    m, k, n = shape
+    sp, y_ref, y_staged, y_fused = _run_case(
+        spec_name, m, k, n, radc=radc, adc_mode=adc_mode
+    )
+    label = f"{spec_name} radc={radc} {adc_mode} {shape}"
+    _assert_contract(sp, False, y_ref, y_staged, f"staged {label}")
+    _assert_contract(sp, False, y_ref, y_fused, f"fused {label}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arr", [(16, 16), (32, 64), (64, 32)])
+def test_kernel_matches_oracle_array_sizes(arr):
+    sp, y_ref, y_staged, y_fused = _run_case(
+        "int8", 45, 70, 48, arr=arr, radc=256, adc_mode="dynamic"
+    )
+    label = f"arr={arr}"
+    _assert_contract(sp, False, y_ref, y_staged, f"staged {label}")
+    _assert_contract(sp, False, y_ref, y_fused, f"fused {label}")
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(
+        spec_name=st.sampled_from(["int4", "int8", "fp16", "bf16"]),
+        m=st.integers(1, 70),
+        k=st.integers(2, 90),
+        n=st.integers(1, 70),
+        radc=st.sampled_from([0, 64, 256]),
+        adc_mode=st.sampled_from(["fullscale", "dynamic", "dynamic_row"]),
+        noise=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_kernel_matches_oracle_hypothesis(
+        spec_name, m, k, n, radc, adc_mode, noise, seed
+    ):
+        sp, y_ref, y_staged, y_fused = _run_case(
+            spec_name, m, k, n, radc=radc, adc_mode=adc_mode, noise=noise,
+            seed=seed,
+        )
+        label = f"{spec_name} {m}x{k}x{n} radc={radc} {adc_mode} noise={noise}"
+        _assert_contract(sp, noise, y_ref, y_staged, f"staged {label}")
+        _assert_contract(sp, noise, y_ref, y_fused, f"fused {label}")
