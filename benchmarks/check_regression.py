@@ -23,6 +23,11 @@ the same process on the same shape:
   of short requests under a mixed short/long Poisson workload,
   unchunked / chunked prefill (a drop means chunked admission stopped
   bounding the head-of-line blocking of a long prompt's prefill).
+* ``serve_prefix_cache.*`` — refcounted prefix caching: the
+  deterministic fully-cached probe indicator (1.0 = an identical repeat
+  prompt ran ZERO prefix prefill chunks) plus the loose Zipf-workload
+  median-TTFT ratio cache-on vs cache-off (wall-clock, so the 2.5x
+  slack absorbs runner noise; the probe indicator is the hard gate).
 * ``dpe_kernel.*`` / ``paged_attention.*`` — the Pallas serving-kernel
   contract: deterministic bitwise/ulp agreement indicators (1.0 = holds)
   plus two analytic traffic ratios (staged/fused HBM bytes per GEMM,
@@ -59,6 +64,17 @@ CHECKS = (
     # a drop means long-prompt admission re-acquired the loop-blocking
     # behaviour chunking exists to bound (serve/batching.py)
     ("serve_chunked ttft", "serve_chunked.ttft_p95_short_improvement"),
+    # prefix cache: the deterministic probe — an identical repeat of a
+    # just-served prompt must map every prefix block from cache and run
+    # zero prefix prefill chunks (1.0 = holds; serve/prefix_cache.py)
+    ("serve_prefix_cache fully-cached skip",
+     "serve_prefix_cache.probe.fully_cached_prefix_skipped"),
+    # and the wall-clock Zipf-workload win: median TTFT cache-off over
+    # cache-on (p50 self-normalises across the quick/full request
+    # counts; the p95 tail stretches with workload size, so it is
+    # reported but not gated)
+    ("serve_prefix_cache ttft",
+     "serve_prefix_cache.ttft_p50_cold_over_cached"),
     # Pallas serving kernels (deterministic indicators — interpret-mode
     # wall time is meaningless on the CPU runner, so the gate pins the
     # numerics contract and the analytic traffic wins instead):

@@ -84,6 +84,16 @@ def main(argv=None):
     ap.add_argument("--kv_blocks", type=int, default=0,
                     help="total paged-arena blocks (0 = slots x "
                          "ceil(max_len/block_size) + trash block)")
+    ap.add_argument("--prefix_cache", nargs="?", const="on", default="on",
+                    choices=("on", "off"),
+                    help="refcounted prefix block cache (DESIGN.md §7): "
+                         "shared prompt prefixes map to resident KV "
+                         "blocks and skip their prefill chunks; 'off' "
+                         "reverts to the plain free-list allocator")
+    ap.add_argument("--shared_prefix", type=int, default=0,
+                    help="prepend a common N-token preamble to every "
+                         "request's prompt (system-prompt simulation — "
+                         "what the prefix cache deduplicates)")
     ap.add_argument("--kernels", default="auto",
                     choices=("auto", "off", "interpret", "on"),
                     help="Pallas serving kernels: auto (on iff TPU), off "
@@ -215,7 +225,12 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.rate, size=args.requests)
         )
-    max_len = args.max_len or int(lens.max() + args.gen + 1)
+    preamble = rng.integers(
+        0, cfg.vocab, size=args.shared_prefix
+    ).astype(np.int32)
+    max_len = args.max_len or int(
+        lens.max() + args.shared_prefix + args.gen + 1
+    )
     loop = ServeLoop(
         params, cfg, policy=policy, slots=args.slots, max_len=max_len,
         prefill_chunk=args.prefill_chunk or None,
@@ -223,13 +238,17 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         kv_blocks=args.kv_blocks or None,
         compute_dtype=jnp.float32, programmed=programmed,
         weight_stationary=not args.per_call, mesh=mesh,
+        prefix_cache=args.prefix_cache == "on",
     )
     reqs = [
         Request(
             rid=i,
-            tokens=rng.integers(0, cfg.vocab, size=int(lens[i])).astype(
-                np.int32
-            ),
+            tokens=np.concatenate([
+                preamble,
+                rng.integers(0, cfg.vocab, size=int(lens[i])).astype(
+                    np.int32
+                ),
+            ]),
             max_new_tokens=args.gen,
             submit_time=float(arrivals[i]),
         )
@@ -270,7 +289,16 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         )
     print(
         f"paged arena: {report.kv_blocks} blocks x "
-        f"{loop.block_size} tokens, {report.kv_blocks_reused} reused"
+        f"{loop.block_size} tokens, {report.kv_blocks_reused} reused, "
+        f"{report.admission_deferrals} admission deferrals"
+    )
+    print(
+        f"prefix cache [{args.prefix_cache}]: "
+        f"{report.prefix_cache_hits} block hits / "
+        f"{report.prefix_cache_misses} misses, "
+        f"{report.prefix_cache_cow_copies} COW copies, "
+        f"{report.prefix_cache_evictions} evictions, "
+        f"{report.prefill_chunks_run} prefill chunks run"
     )
     print("sample:", report.results[0].tokens[:16])
     return report

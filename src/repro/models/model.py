@@ -369,6 +369,34 @@ def init_paged_cache(
     return cache
 
 
+def copy_paged_block(cache: dict, src, dst):
+    """Clone physical block ``src``'s K/V rows into block ``dst`` across
+    every layer's pool — the copy-on-write step of prefix sharing
+    (DESIGN.md §7).
+
+    When two requests share prefix blocks (refcount > 1) the block
+    holding the first position a lane will WRITE must be cloned before
+    that write: the sharer keeps reading ``src`` while the writer's
+    block table points at ``dst``.  One ``(steps, block_size, kvh, hd)``
+    row moves per layer segment and K/V side; ``src``/``dst`` are traced
+    scalars so the serve loop jits this once (donating the arena) for
+    any block pair.  Block tables and ``pos`` are untouched — the caller
+    rebinds its own table row.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    blocks = {}
+    for name, seg in cache["blocks"].items():
+        out = {}
+        for side, pool in seg.items():
+            row = lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+            out[side] = lax.dynamic_update_slice_in_dim(
+                pool, row, dst, axis=1
+            )
+        blocks[name] = out
+    return {**cache, "blocks": blocks}
+
+
 def _seg_cache(cfg, tmpl, steps, batch, max_len, dtype):
     g = group_size(cfg)
     if g == 1:

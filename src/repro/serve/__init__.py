@@ -13,8 +13,11 @@ from .engine import (
     make_prefill_step,
     make_slot_prefill,
 )
+from .prefix_cache import AdmitPlan, PrefixCache
 
 __all__ = [
+    "AdmitPlan",
+    "PrefixCache",
     "make_prefill_step",
     "make_slot_prefill",
     "make_chunk_prefill",

@@ -12,12 +12,18 @@ this module amortises it over a *stream* of requests (DESIGN.md §7):
   (``kv_blocks x block_size`` token rows, donated across steps) indexed
   through per-slot block tables — and ONE shared programmed pytree
   (replicated or mesh-sharded).  Each iteration (1) admits ready
-  requests into free lanes, allocating their blocks from the pool's
-  free list, (2) advances every still-prefilling lane by exactly ONE
-  prompt chunk (chunked prefill: a long prompt never monopolises an
-  iteration), and (3) runs one jitted slot-parallel decode step for the
-  active lanes, retiring finished sequences (EOS / max-token), freeing
-  their blocks, and refilling from the queue next iteration.
+  requests into free lanes through the refcounted
+  :class:`~repro.serve.prefix_cache.PrefixCache` — block-aligned prompt
+  prefixes already resident in the arena are MAPPED (refcount bump, no
+  prefill) and only the cold tail allocates fresh blocks, with a jitted
+  copy-on-write block copy when the first written position lands in a
+  shared block — (2) advances every still-prefilling lane by exactly
+  ONE prompt chunk starting at its first uncached position (chunked
+  prefill: a long prompt never monopolises an iteration; a fully cached
+  prompt recomputes exactly one token), and (3) runs one jitted
+  slot-parallel decode step for the active lanes, retiring finished
+  sequences (EOS / max-token), releasing their block references, and
+  refilling from the queue next iteration.
 
 Equivalence contract (tests/test_batching.py, DESIGN.md §7): a request
 decoded through this engine emits exactly the tokens ``greedy_generate``
@@ -48,9 +54,10 @@ from repro.core.layers import MemPolicy
 from repro.distributed.sharding import rules_context
 from repro.kernels import ops as _kops
 from repro.models import program_params
-from repro.models.model import init_paged_cache
+from repro.models.model import copy_paged_block, init_paged_cache
 
 from .engine import make_chunk_prefill, make_decode_step
+from .prefix_cache import PrefixCache
 
 __all__ = [
     "Request",
@@ -90,18 +97,27 @@ class RequestResult:
     """Per-request outcome.  ``tokens`` are exactly the tokens solo
     ``greedy_generate`` would emit for this prompt (the batched==solo
     contract); timing fields are host wall-clock seconds relative to
-    ``ServeLoop.run`` start."""
+    ``ServeLoop.run`` start.  ``cached_prompt_tokens`` counts prompt
+    positions served from the prefix cache (KV mapped, prefill skipped)
+    and ``prefill_chunks`` the chunks actually run — a fully cached
+    prompt runs exactly one (the single-token logit recompute).
+    Requests refused at submission (prompt longer than the largest pad
+    bucket) come back with ``finish_reason="refused"``, empty
+    ``tokens``, and the reason in ``error``."""
 
     rid: int
     prompt_len: int
     tokens: list[int]
-    finish_reason: str  # "eos" | "length"
+    finish_reason: str  # "eos" | "length" | "refused"
     submit_time: float
     admit_time: float
     first_token_time: float
     finish_time: float
     decode_steps: int
     logits: list[np.ndarray] | None = None  # only when collect_logits
+    cached_prompt_tokens: int = 0
+    prefill_chunks: int = 0
+    error: str | None = None  # only when finish_reason == "refused"
 
     @property
     def latency_s(self) -> float:
@@ -143,10 +159,19 @@ class ServeReport:
 
     ``results`` are in submission order.  ``kv_blocks_reused`` counts
     pool blocks that were freed by a retired request and re-allocated to
-    a later one (the paged-arena reclaim at work); ``trace`` (only with
-    ``collect_trace=True``) records per-iteration scheduler activity —
-    ``{"chunks": prefill chunks run, "decoded": lanes decoded}`` — for
-    starvation analysis."""
+    a later one (the paged-arena reclaim at work).  The prefix-cache
+    counters (DESIGN.md §7): ``prefix_cache_hits`` / ``_misses`` count
+    hashed prompt blocks that were / were not already resident at
+    admission, ``prefix_cache_evictions`` LRU-parked blocks reclaimed
+    under allocation pressure, ``prefix_cache_cow_copies`` the jitted
+    copy-on-write block copies that kept shared blocks immutable.
+    ``admission_deferrals`` counts iterations in which the FIFO head
+    request was ready but pool-starved (it defers, and — FIFO-first —
+    head-of-line-blocks every later ready request); ``prefill_chunks_run``
+    totals prefill chunk steps actually executed, the device work prefix
+    caching removes.  ``trace`` (only with ``collect_trace=True``)
+    records per-iteration scheduler activity — ``{"chunks": prefill
+    chunks run, "decoded": lanes decoded}`` — for starvation analysis."""
 
     results: list[RequestResult]
     wall_s: float
@@ -155,27 +180,38 @@ class ServeReport:
     occupancy: float  # mean active slots per decode step / total slots
     kv_blocks: int = 0
     kv_blocks_reused: int = 0
+    prefix_cache_hits: int = 0
+    prefix_cache_misses: int = 0
+    prefix_cache_evictions: int = 0
+    prefix_cache_cow_copies: int = 0
+    admission_deferrals: int = 0
+    prefill_chunks_run: int = 0
     trace: list | None = None
 
     @property
     def tok_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
+    def completed(self) -> list[RequestResult]:
+        """Results that actually ran (refused requests excluded — their
+        timing fields are vacuous and would poison the percentiles)."""
+        return [r for r in self.results if r.finish_reason != "refused"]
+
     def latency_percentiles(self) -> dict:
         """End-to-end (submit → last token) latency percentiles."""
-        return _percentiles(r.latency_s for r in self.results)
+        return _percentiles(r.latency_s for r in self.completed())
 
     def ttft_percentiles(self) -> dict:
         """Time-to-first-token percentiles — the responsiveness metric
-        chunked prefill targets (a long neighbour's prompt no longer
-        stalls a short request's first token)."""
-        return _percentiles(r.ttft_s for r in self.results)
+        chunked prefill and prefix caching target (a cached prefix skips
+        its prefill chunks entirely)."""
+        return _percentiles(r.ttft_s for r in self.completed())
 
     def itl_percentiles(self) -> dict:
         """Per-request mean inter-token-latency percentiles (decode-phase
         smoothness; requests with a single token are excluded)."""
         return _percentiles(
-            r.itl_s for r in self.results if len(r.tokens) > 1
+            r.itl_s for r in self.completed() if len(r.tokens) > 1
         )
 
 
@@ -271,6 +307,16 @@ def _jit_admit():
     return jax.jit(admit, donate_argnums=(0,))
 
 
+@lru_cache(maxsize=None)
+def _jit_copy():
+    """Copy-on-write block copy (jitted, arena donated): run at
+    admission when a request's first written position lands in a block
+    another live request still references — the sharer keeps reading
+    ``src``, this lane's table points at the ``dst`` clone before any
+    write happens, so a block is never mutated while refcount > 1."""
+    return jax.jit(copy_paged_block, donate_argnums=(0,))
+
+
 def default_buckets(max_len: int) -> tuple[int, ...]:
     """Prompt-length pad buckets: powers of two capped at ``max_len``.
     With ``prefill_chunk=None`` these are the single-chunk lengths (one
@@ -293,13 +339,18 @@ def default_buckets(max_len: int) -> tuple[int, ...]:
 class _SlotState:
     request: Request
     admit_time: float
-    blocks: list
+    plan: object  # prefix_cache.AdmitPlan — owns the block references
     prefill_pos: int = 0
     first_token_time: float = 0.0
     out: list = field(default_factory=list)
     logits: list | None = None
     decode_steps: int = 0
+    prefill_chunks: int = 0
     finish_reason: str | None = None
+
+    @property
+    def blocks(self) -> list:
+        return self.plan.blocks
 
 
 class ServeLoop:
@@ -310,17 +361,25 @@ class ServeLoop:
     1. **Admit**: every free lane takes the next ready request FIFO, if
        the block pool can cover its full KV need
        (``ceil((prompt_len + max_new - 1) / block_size)`` blocks,
-       allocated eagerly so decode never stalls mid-stream); otherwise
-       the request waits for a retirement to free blocks.
+       eager so decode never stalls mid-stream); otherwise the request
+       waits for a retirement to free blocks.  With ``prefix_cache``
+       (default on), block-aligned prompt prefixes already resident in
+       the arena are MAPPED instead of allocated (refcount bump), only
+       the cold tail takes fresh blocks, and a fully cached prompt's
+       last hit block is cloned first when it is shared (jitted
+       copy-on-write) — shared blocks are immutable while refcount > 1.
     2. **Prefill one chunk per lane**: each still-prefilling lane
        advances by exactly ONE chunk of ``prefill_chunk`` tokens
-       (``None`` = the whole prompt in one bucket-padded chunk).  A long
-       prompt therefore spreads over many iterations and can never
-       monopolise one — active lanes decode between its chunks.
+       (``None`` = the remaining prompt in one bucket-padded chunk),
+       starting at its first uncached position.  A long prompt therefore
+       spreads over many iterations and can never monopolise one — and
+       a cached prefix skips its chunks entirely (a fully cached prompt
+       recomputes exactly one token for its first-token logits).
     3. **Decode**: one jitted slot-parallel step over the active lanes;
-       finished sequences (EOS / max-token) retire, their blocks return
-       to the free list, and the lane re-enters admission next
-       iteration.
+       finished sequences (EOS / max-token) retire, each of their block
+       references drops, zero-reference blocks park in the LRU pool
+       (drained only under allocation pressure) or return to the free
+       list, and the lane re-enters admission next iteration.
 
     Numerics contract: per-request tokens are identical to solo
     ``greedy_generate``; fast-path logits are bitwise invariant to
@@ -354,6 +413,7 @@ class ServeLoop:
         collect_logits: bool = False,
         collect_trace: bool = False,
         allow_coupled_numerics: bool = False,
+        prefix_cache: bool = True,
     ):
         if cfg.encoder is not None or cfg.vision_prefix:
             raise NotImplementedError(
@@ -431,10 +491,14 @@ class ServeLoop:
         self._chunk = _jit_chunk(cfg, self.policy, compute_dtype, mesh)
         self._decode = _jit_decode(cfg, self.policy, compute_dtype, mesh)
         self._admit = _jit_admit()
-        # host-side block allocator (block 0 = trash, never allocated)
-        self._free_list = list(range(1, self.kv_blocks))
-        self._ever_freed: set = set()
-        self.blocks_reused = 0
+        self._copy = _jit_copy()
+        # host-side refcounted block allocator (block 0 = trash, never
+        # handed out); prefix_cache=False degrades it to the plain
+        # free list with identical allocation order
+        self.prefix_cache = bool(prefix_cache)
+        self._blocks = PrefixCache(
+            self.kv_blocks, self.block_size, enabled=self.prefix_cache
+        )
 
     # -- block allocator ----------------------------------------------------
 
@@ -443,26 +507,28 @@ class ServeLoop:
         # plen+max_new-2 (the final emitted token's KV is never stored)
         return -(-(len(r.tokens) + r.max_new_tokens - 1) // self.block_size)
 
-    def _alloc_blocks(self, n: int) -> list | None:
-        if len(self._free_list) < n:
-            return None
-        blocks = [self._free_list.pop() for _ in range(n)]
-        self.blocks_reused += sum(
-            1 for b in blocks if b in self._ever_freed
-        )
-        return blocks
-
-    def _release_blocks(self, blocks: list) -> None:
-        self._ever_freed.update(blocks)
-        self._free_list.extend(blocks)
-
     # -- helpers ------------------------------------------------------------
 
     def _bucket_for(self, prompt_len: int) -> int:
         for b in self.buckets:
             if b >= prompt_len:
                 return b
+        # unreachable from the loop: prompts longer than the largest
+        # bucket are refused per-request in run() before admission
         raise ValueError(f"prompt_len {prompt_len} > max bucket")
+
+    def _refusal(self, r: Request) -> str | None:
+        """Per-request refusal reason, or None when servable.  Prompts
+        longer than the largest pad bucket used to raise out of
+        ``_bucket_for`` MID-RUN, killing every other in-flight request;
+        they are refused up front instead (result with
+        ``finish_reason="refused"``)."""
+        if len(r.tokens) > self.buckets[-1]:
+            return (
+                f"prompt_len({len(r.tokens)}) exceeds the largest "
+                f"prefill bucket ({self.buckets[-1]})"
+            )
+        return None
 
     def _validate(self, r: Request) -> None:
         n = len(r.tokens)
@@ -506,6 +572,22 @@ class ServeLoop:
             finish_time=now,
             decode_steps=st.decode_steps,
             logits=st.logits,
+            cached_prompt_tokens=st.plan.cached_len,
+            prefill_chunks=st.prefill_chunks,
+        )
+
+    def _refused_result(self, r: Request, msg: str) -> RequestResult:
+        return RequestResult(
+            rid=r.rid,
+            prompt_len=len(r.tokens),
+            tokens=[],
+            finish_reason="refused",
+            submit_time=r.submit_time,
+            admit_time=r.submit_time,
+            first_token_time=r.submit_time,
+            finish_time=r.submit_time,
+            decode_steps=0,
+            error=msg,
         )
 
     # -- the loop -----------------------------------------------------------
@@ -515,29 +597,43 @@ class ServeLoop:
         (same order as submitted) plus aggregate throughput/latency.
         Tokens per request satisfy the batched==solo contract (module
         docstring); requests whose prompt + budget exceed ``max_len`` or
-        the whole block pool are refused, not clamped."""
+        the whole block pool raise, not clamp.  A prompt longer than the
+        largest pad bucket is refused PER-REQUEST (result with
+        ``finish_reason="refused"`` and the reason in ``error``) so one
+        oversized prompt never kills the rest of the stream."""
         requests = list(requests)
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("request rids must be unique")
+        refused: dict[int, RequestResult] = {}
+        live = []
         for r in requests:
+            msg = self._refusal(r)
+            if msg is not None:
+                refused[r.rid] = self._refused_result(r, msg)
+                continue
             self._validate(r)
+            live.append(r)
         ctx = (
             rules_context(self.mesh) if self.mesh is not None
             else contextlib.nullcontext()
         )
         with ctx:
-            return self._run(requests)
+            report = self._run(live)
+        if refused:
+            by_rid = {res.rid: res for res in report.results}
+            by_rid.update(refused)
+            report.results = [by_rid[r.rid] for r in requests]
+        return report
 
     def _run(self, requests) -> ServeReport:
         queue = RequestQueue()
         for r in requests:
             queue.submit(r)
-        # fresh allocator per run — reuse stats are per-run, and a run
-        # that raised mid-flight must not leak blocks into the next one
-        self._free_list = list(range(1, self.kv_blocks))
-        self._ever_freed = set()
-        self.blocks_reused = 0
+        # fresh allocator per run — cache contents and stats are
+        # per-run, and a run that raised mid-flight must not leak
+        # blocks (or stale hashes) into the next one
+        self._blocks.reset()
         K = self.slots
         cache = init_paged_cache(
             self.cfg, K, self.max_len, self.block_size, self.kv_blocks,
@@ -548,6 +644,8 @@ class ServeLoop:
         active = np.zeros((K,), bool)
         results: dict[int, RequestResult] = {}
         deferred: Request | None = None  # ready but pool-starved
+        deferrals = 0
+        total_chunks = 0
         trace: list | None = [] if self.collect_trace else None
         t0 = time.monotonic()
         decode_steps = 0
@@ -570,19 +668,28 @@ class ServeLoop:
                 deferred = None
                 if r is None:
                     break
-                blocks = self._alloc_blocks(self._blocks_needed(r))
-                if blocks is None:
+                plan = self._blocks.admit(r.tokens, self._blocks_needed(r))
+                if plan is None:
                     deferred = r
+                    deferrals += 1
                     break
                 bt_row = np.zeros((self.blocks_per_slot,), np.int32)
-                bt_row[: len(blocks)] = blocks
+                bt_row[: len(plan.blocks)] = plan.blocks
                 cache = self._admit(
                     cache, jnp.int32(k), jnp.asarray(bt_row)
                 )
+                if plan.cow is not None:
+                    # the one device cost of sharing: clone the shared
+                    # block this lane is about to write into
+                    src, dst = plan.cow
+                    cache = self._copy(
+                        cache, jnp.int32(src), jnp.int32(dst)
+                    )
                 slot_state[k] = _SlotState(
                     request=r,
                     admit_time=now(),
-                    blocks=blocks,
+                    plan=plan,
+                    prefill_pos=plan.resume_pos,
                     logits=[] if self.collect_logits else None,
                 )
                 active[k] = False
@@ -596,8 +703,10 @@ class ServeLoop:
                     continue
                 r = st.request
                 plen = len(r.tokens)
-                clen = self.prefill_chunk or self._bucket_for(plen)
                 start = st.prefill_pos
+                # a cached prefix shrinks the remaining prompt — the
+                # unchunked bucket covers only what is left to run
+                clen = self.prefill_chunk or self._bucket_for(plen - start)
                 nv = min(clen, plen - start)
                 toks = np.zeros((clen,), np.int32)
                 toks[:nv] = np.asarray(r.tokens[start:start + nv], np.int32)
@@ -607,14 +716,16 @@ class ServeLoop:
                     jnp.bool_(start + nv >= plen), self.programmed,
                 )
                 st.prefill_pos = start + nv
+                st.prefill_chunks += 1
                 chunks_run += 1
+                self._blocks.register_progress(st.plan, st.prefill_pos)
                 if st.prefill_pos >= plen:  # final chunk → first token
                     t_first = int(jnp.argmax(logits[0]))
                     st.first_token_time = now()
                     generated += 1
                     if self._emit(st, t_first, logits[0]):
                         results[r.rid] = self._result(st, now())
-                        self._release_blocks(st.blocks)
+                        self._blocks.release(st.plan)
                         slot_state[k] = None
                     else:
                         next_tok[k] = t_first
@@ -643,7 +754,7 @@ class ServeLoop:
                     row = logits_np[k] if logits_np is not None else None
                     if self._emit(st, t, row):
                         results[st.request.rid] = self._result(st, now())
-                        self._release_blocks(st.blocks)
+                        self._blocks.release(st.plan)
                         slot_state[k] = None
                         active[k] = False
                     else:
@@ -660,11 +771,13 @@ class ServeLoop:
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
 
+            total_chunks += chunks_run
             if trace is not None:
                 trace.append({"chunks": chunks_run, "decoded": decoded})
 
         wall = now()
         ordered = [results[r.rid] for r in requests]
+        alloc = self._blocks
         return ServeReport(
             results=ordered,
             wall_s=wall,
@@ -674,6 +787,12 @@ class ServeLoop:
                 occupancy / (decode_steps * K) if decode_steps else 0.0
             ),
             kv_blocks=self.kv_blocks,
-            kv_blocks_reused=self.blocks_reused,
+            kv_blocks_reused=alloc.blocks_reused,
+            prefix_cache_hits=alloc.hits,
+            prefix_cache_misses=alloc.misses,
+            prefix_cache_evictions=alloc.evictions,
+            prefix_cache_cow_copies=alloc.cow_copies,
+            admission_deferrals=deferrals,
+            prefill_chunks_run=total_chunks,
             trace=trace,
         )

@@ -204,13 +204,20 @@ def make_chunk_prefill(
     token — the request's first-token logits when ``final`` is True;
     non-final chunks skip the vocab head entirely and return zeros.
     One compile serves every ``(chunk_len,)`` shape — slot, start
-    offset, valid-token count and finality are traced.
+    offset, valid-token count and finality are traced.  Because
+    ``start`` is traced, a lane can begin anywhere in its prompt: the
+    prefix cache admits a request with its first ``cached_len`` tokens'
+    KV already resident (shared blocks mapped into the slot's table) and
+    prefill simply resumes at ``start = cached_len`` — the chunk attends
+    over the gathered table, cached blocks included, exactly as a cold
+    run's later chunks attend over their own earlier writes.
 
-    Numerics contract (tests/test_batching.py): fast-path logits are
-    BITWISE identical across chunk sizes and block-table layouts; the
-    faithful row-independent engine agrees to GEMM-kernel rounding with
-    tokens equal — the same tolerance classes as the decode-path
-    batched==solo contract.
+    Numerics contract (tests/test_batching.py, tests/test_prefix_cache.py):
+    fast-path logits are BITWISE identical across chunk sizes,
+    block-table layouts, and cache-hit patterns (a resumed prefill is
+    indistinguishable from a cold one); the faithful row-independent
+    engine agrees to GEMM-kernel rounding with tokens equal — the same
+    tolerance classes as the decode-path batched==solo contract.
     """
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving

@@ -334,6 +334,9 @@ def test_paged_pool_reuses_freed_blocks_without_leakage(model, programmed):
     )
     rep = loop.run(_requests(prompts, workload))
     assert rep.kv_blocks_reused > 0, "pool pressure should force reuse"
+    # 6 usable blocks = 2 lanes' worth across 3 slots: some admission
+    # must have waited for a retirement, and the report says how often
+    assert rep.admission_deferrals > 0, "pool pressure should defer"
     for res, p, (_, m) in zip(rep.results, prompts, workload):
         ref = greedy_generate(
             params, cfg, jnp.asarray(p)[None], m - 1,

@@ -8,6 +8,12 @@ Properties (fast engine — bitwise row-independent by construction):
 * **Stopping never leaks**: every stream is cut at min(first EOS,
   max_new_tokens) — never a token past the stop position, and
   truncation never changes the tokens before it.
+* **The allocator partitions the arena**: after ANY interleaving of
+  admit / retire (including prefix sharing, copy-on-write, LRU parking
+  and eviction) the live block sets, the free list, and the LRU pool
+  are disjoint and exactly cover blocks ``1..kv_blocks-1``; block 0
+  (trash) is never handed out, and refcounts never go below 1 while
+  held.
 
 When ``hypothesis`` is installed the properties are checked over random
 workloads; otherwise a deterministic grid of representative workloads
@@ -30,7 +36,7 @@ from repro.configs import get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.models import init_params, program_params
-from repro.serve import Request, ServeLoop
+from repro.serve import PrefixCache, Request, ServeLoop
 
 INT8 = spec("int8")
 FAST = MemPolicy(
@@ -111,6 +117,59 @@ def check_stopping_never_leaks(seed, n_requests, slots):
         assert len(got) <= wl[rid][1], "leaked past max_new_tokens"
 
 
+def check_allocator_partition(seed, n_blocks, block_size, n_ops):
+    """Drive the host-side PrefixCache through a random interleaving of
+    admissions (with real sharing: few prompt families → repeated
+    chained hashes), prefill progress, and retirements, checking the
+    partition invariant after EVERY operation.  No device work — this
+    exercises refcounts, COW planning, LRU parking, and eviction pure
+    host-side."""
+    rng = np.random.default_rng(seed)
+    pc = PrefixCache(n_blocks, block_size)
+    # few families over a tiny alphabet → admissions collide on purpose
+    prompts = [
+        rng.integers(0, 4, size=int(l)).astype(np.int32)
+        for l in rng.integers(1, 4 * block_size + 1, size=5)
+    ]
+    live = []
+    for _ in range(n_ops):
+        if rng.integers(0, 3) <= 1 or not live:  # admit-biased
+            toks = prompts[int(rng.integers(len(prompts)))]
+            extra = int(rng.integers(1, 2 * block_size))
+            need = -(-(len(toks) + extra - 1) // block_size)
+            plan = pc.admit(toks, need)
+            if plan is not None:
+                assert 0 not in plan.blocks, "trash block handed out"
+                assert len(plan.blocks) == need
+                assert len(set(plan.blocks)) == need, "duplicate block"
+                if plan.cow is not None:
+                    src, dst = plan.cow
+                    # COW: the shared source stays with its other
+                    # holder(s), never enters our table, and the clone
+                    # replaces the last hit block
+                    assert src not in plan.blocks
+                    assert dst in plan.blocks
+                    assert pc._ref[src] >= 1
+                elif plan.cached_len == len(toks) and plan.cached_len:
+                    # full hit without COW → we are the sole owner of
+                    # the block the recompute will write in place
+                    last_hit = plan.blocks[len(toks) // block_size - 1]
+                    assert pc._ref[last_hit] == 1
+                # partial prefill progress, registering completed blocks
+                pos = int(rng.integers(plan.resume_pos, len(toks) + 1))
+                pc.register_progress(plan, pos)
+                live.append((plan, len(toks)))
+        else:  # retire a random live request
+            plan, plen = live.pop(int(rng.integers(len(live))))
+            pc.register_progress(plan, plen)  # finish its prefill
+            pc.release(plan)
+        pc.check_partition()
+    for plan, _ in live:
+        pc.release(plan)
+    pc.check_partition()
+    assert not pc.live_blocks, "references leaked past release"
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=8, deadline=None)
@@ -128,6 +187,16 @@ if HAVE_HYPOTHESIS:
     def test_stopping_never_leaks(seed, n_requests, slots):
         check_stopping_never_leaks(seed, n_requests, slots)
 
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(2, 24),
+        st.integers(1, 8),
+        st.integers(1, 120),
+    )
+    def test_allocator_partition(seed, n_blocks, block_size, n_ops):
+        check_allocator_partition(seed, n_blocks, block_size, n_ops)
+
 else:
 
     @pytest.mark.parametrize(
@@ -142,3 +211,17 @@ else:
     )
     def test_stopping_never_leaks(seed, n_requests, slots):
         check_stopping_never_leaks(seed, n_requests, slots)
+
+    @pytest.mark.parametrize(
+        "seed,n_blocks,block_size,n_ops",
+        [
+            (0, 8, 4, 120),   # heavy pressure: constant evict/park churn
+            (1, 24, 1, 120),  # 1-token blocks: every prompt fully hashed
+            (2, 3, 8, 80),    # near-minimal pool
+            (3, 16, 2, 120),
+            (4, 12, 8, 120),
+            (5, 2, 1, 60),    # single usable block
+        ],
+    )
+    def test_allocator_partition(seed, n_blocks, block_size, n_ops):
+        check_allocator_partition(seed, n_blocks, block_size, n_ops)

@@ -1,0 +1,310 @@
+"""Prefix-caching equivalence suite (serve/prefix_cache.py, DESIGN.md §7).
+
+Contract under test:
+
+* **Sharing is invisible, bitwise (fast path).**  A cache-hit request's
+  per-step logits are BIT-identical to its own cold-start run — for full
+  hits (prefill collapses to a single-token recompute), partial hits
+  (prefill resumes mid-prompt over resident blocks), and LRU
+  resurrections — across block sizes, chunk sizes, and packings.  The
+  neighbours SHARING blocks with it are equally unperturbed.
+* **COW never mutates a shared block.**  When a full-hit request's
+  single-token recompute would write into a block another live request
+  references, the block is cloned first (jitted copy) — the sharer's
+  logits stay bitwise identical to a run without the sharer.
+* **Eviction is leak-free.**  Under pool pressure, LRU-parked blocks are
+  reclaimed (oldest first), the partition invariant holds, and every
+  request still emits exactly its solo tokens.
+* **Kernels-forced leg.**  The same bitwise statements hold with the
+  Pallas paged-attention kernels forced (interpret mode): the kernel
+  reads whatever the block table points at, so sharing must be invisible
+  to it too.
+* **Oversized prompts are refused per-request** (regression: they used
+  to raise out of ``_bucket_for`` MID-RUN, killing the whole stream).
+* The faithful row-independent engine keeps tokens equal to solo under
+  sharing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, spec
+from repro.core.layers import MemPolicy
+from repro.kernels import ops as kops
+from repro.models import init_params, program_params
+from repro.serve import Request, ServeLoop, greedy_generate
+
+INT8 = spec("int8")
+POLICIES = {
+    "fast": MemPolicy(
+        default=DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
+    ),
+    "faithful": MemPolicy(
+        default=DPEConfig(
+            input_spec=INT8, weight_spec=INT8, array_size=(32, 32),
+            mode="faithful", adc_mode="dynamic_row",
+        )
+    ),
+}
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def programmed(model):
+    cfg, params = model
+    return {
+        name: program_params(params, cfg, pol, jax.random.PRNGKey(0))
+        for name, pol in POLICIES.items()
+    }
+
+
+def _loop(model, programmed, mode="fast", **kw):
+    cfg, params = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("block_size", 8)
+    return ServeLoop(
+        params, cfg, policy=POLICIES[mode], compute_dtype=jnp.float32,
+        programmed=programmed[mode], collect_logits=True, **kw
+    )
+
+
+def _solo(model, programmed, p, m, mode="fast"):
+    cfg, params = model
+    ref = greedy_generate(
+        params, cfg, jnp.asarray(p)[None], m - 1, policy=POLICIES[mode],
+        compute_dtype=jnp.float32, programmed=programmed[mode],
+        max_len=MAX_LEN,
+    )
+    return list(np.asarray(ref[0]))
+
+
+def _assert_bitwise(a, b, ctx=""):
+    assert a.tokens == b.tokens, ctx
+    assert len(a.logits) == len(b.logits), ctx
+    for i, (x, y) in enumerate(zip(a.logits, b.logits)):
+        assert np.array_equal(x, y), f"{ctx} logit step {i}"
+
+
+def _cow_workload(cfg, seed=0):
+    """A long-running, B short (frees its slot after one iteration), C
+    repeats A's prompt — admitted while A is still live, so C's full hit
+    shares blocks with refcount 2 and its single-token recompute forces
+    a copy-on-write."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    other = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    return [
+        Request(rid=0, tokens=shared, max_new_tokens=8),
+        Request(rid=1, tokens=other, max_new_tokens=1),
+        Request(rid=2, tokens=shared, max_new_tokens=4),
+    ]
+
+
+def test_full_hit_cow_bitwise(model, programmed):
+    """Full hit with a live sharer: C skips prefill (one single-token
+    chunk), COW clones the shared last block, and every request's logits
+    are bitwise identical to the same packing with the cache off."""
+    cfg, _ = model
+    reqs = _cow_workload(cfg)
+    on = _loop(model, programmed)
+    rep = on.run([Request(**vars(r)) for r in reqs])
+    off = _loop(model, programmed, prefix_cache=False)
+    rep_off = off.run([Request(**vars(r)) for r in reqs])
+
+    c = rep.results[2]
+    assert c.cached_prompt_tokens == 16, "full 2-block hit expected"
+    assert c.prefill_chunks == 1, "fully cached prompt = 1 recompute chunk"
+    assert rep.prefix_cache_cow_copies >= 1, "live sharer must force COW"
+    assert rep.prefix_cache_hits >= 2
+    assert rep_off.prefix_cache_hits == 0
+    # sharing moved data, never arithmetic: bitwise per request,
+    # including the request whose blocks were shared (A)
+    for a, b in zip(rep.results, rep_off.results):
+        _assert_bitwise(a, b, f"rid {a.rid}")
+    for r, q in zip(rep.results, reqs):
+        assert r.tokens == _solo(model, programmed, q.tokens,
+                                 q.max_new_tokens), f"rid {r.rid}"
+    on._blocks.check_partition()
+
+
+@pytest.mark.parametrize("block_size", [4, 8])
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_partial_hit_resumes_mid_prompt(model, programmed, block_size, chunk):
+    """B shares A's first 8 tokens then diverges: admission maps the
+    shared prefix blocks and prefill RESUMES at the first uncached
+    position — bitwise equal to the cold run at every block/chunk
+    geometry."""
+    cfg, _ = model
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    tail_a = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    tail_b = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    reqs = lambda: [
+        Request(rid=0, tokens=np.concatenate([prefix, tail_a]),
+                max_new_tokens=2),
+        Request(rid=1, tokens=np.concatenate([prefix, tail_b]),
+                max_new_tokens=3),
+    ]
+    kw = dict(slots=1, block_size=block_size, prefill_chunk=chunk)
+    rep = _loop(model, programmed, **kw).run(reqs())
+    rep_off = _loop(model, programmed, prefix_cache=False, **kw).run(reqs())
+    b = rep.results[1]
+    assert b.cached_prompt_tokens == 8, (
+        "the shared 8-token prefix must be served from cache"
+    )
+    assert rep.prefix_cache_cow_copies == 0, (
+        "block-aligned divergence never writes a shared block"
+    )
+    if chunk == 4:  # cached prefix skips exactly its 2 chunks (8/4)
+        assert b.prefill_chunks == rep_off.results[1].prefill_chunks - 2
+    for a, c in zip(rep.results, rep_off.results):
+        _assert_bitwise(a, c, f"bs={block_size} chunk={chunk} rid {a.rid}")
+
+
+def test_lru_resurrection_full_hit_in_place(model, programmed):
+    """A retires before B arrives: B's full hit resurrects PARKED blocks
+    (refcount 0 → 1, sole owner) — no COW needed, the single-token
+    recompute rewrites its own block in place, bitwise equal to cold."""
+    cfg, _ = model
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    reqs = lambda: [
+        Request(rid=0, tokens=p, max_new_tokens=2),
+        Request(rid=1, tokens=p, max_new_tokens=4),
+    ]
+    kw = dict(slots=1, prefill_chunk=8)
+    rep = _loop(model, programmed, **kw).run(reqs())
+    rep_off = _loop(model, programmed, prefix_cache=False, **kw).run(reqs())
+    b = rep.results[1]
+    assert b.cached_prompt_tokens == 16
+    assert b.prefill_chunks == 1 and rep_off.results[1].prefill_chunks == 2
+    assert rep.prefix_cache_cow_copies == 0, "sole owner rewrites in place"
+    assert rep.prefix_cache_evictions == 0
+    for a, c in zip(rep.results, rep_off.results):
+        _assert_bitwise(a, c, f"rid {a.rid}")
+
+
+def test_eviction_under_pressure_is_leak_free(model, programmed):
+    """Distinct prompts churn through a small pool: retired requests
+    park their registered blocks, allocation pressure evicts them LRU,
+    and every request still emits its solo tokens — eviction never
+    leaks a block or serves stale KV."""
+    cfg, _ = model
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+        for _ in range(5)
+    ]
+    loop = _loop(
+        model, programmed, slots=1, prefill_chunk=8, kv_blocks=9,
+    )  # 8 usable blocks; each request needs 3 (16 + 8 - 1 positions)
+    rep = loop.run(
+        [Request(rid=i, tokens=p, max_new_tokens=8)
+         for i, p in enumerate(prompts)]
+    )
+    assert rep.prefix_cache_evictions > 0, "pressure must evict"
+    assert rep.prefix_cache_hits == 0, "prompts are all distinct"
+    loop._blocks.check_partition()
+    for r, p in zip(rep.results, prompts):
+        assert r.tokens == _solo(model, programmed, p, 8), f"rid {r.rid}"
+
+
+def test_faithful_row_sharing_tokens_equal(model, programmed):
+    """The faithful ``dynamic_row`` engine under sharing: per-read ADC
+    ranging is row-independent, so cached prefixes keep every request
+    token-identical to its solo run."""
+    cfg, _ = model
+    reqs = _cow_workload(cfg, seed=4)
+    rep = _loop(model, programmed, mode="faithful").run(reqs)
+    assert rep.prefix_cache_hits > 0
+    for r, q in zip(rep.results, reqs):
+        assert r.tokens == _solo(model, programmed, q.tokens,
+                                 q.max_new_tokens, mode="faithful"), (
+            f"rid {r.rid}"
+        )
+
+
+def test_oversized_prompt_refused_per_request(model, programmed):
+    """Regression: a prompt longer than the largest pad bucket used to
+    raise ``ValueError`` out of ``_bucket_for`` mid-run, killing every
+    in-flight request.  It must come back as a per-request refusal while
+    the rest of the stream serves normally."""
+    cfg, _ = model
+    rng = np.random.default_rng(5)
+    oversized = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+    ok = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    loop = _loop(model, programmed, slots=2, buckets=(8, 16))
+    rep = loop.run([
+        Request(rid=0, tokens=oversized, max_new_tokens=2),
+        Request(rid=1, tokens=ok, max_new_tokens=3),
+    ])
+    refused, served = rep.results
+    assert refused.finish_reason == "refused"
+    assert refused.tokens == [] and refused.decode_steps == 0
+    assert "bucket" in refused.error
+    assert served.finish_reason == "length"
+    assert served.tokens == _solo(model, programmed, ok, 3)
+    # refused requests are excluded from the latency statistics
+    assert len(rep.completed()) == 1
+    assert rep.ttft_percentiles()["p50"] == served.ttft_s
+
+
+def test_prefix_cache_off_reports_zero_counters(model, programmed):
+    """``prefix_cache=False`` degrades to the plain free-list allocator:
+    no hashing, no hits, no COW — the observability counters stay 0."""
+    cfg, _ = model
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    loop = _loop(model, programmed, prefix_cache=False, slots=1)
+    rep = loop.run([
+        Request(rid=0, tokens=p, max_new_tokens=2),
+        Request(rid=1, tokens=p, max_new_tokens=2),
+    ])
+    assert rep.prefix_cache_hits == 0
+    assert rep.prefix_cache_misses == 0
+    assert rep.prefix_cache_cow_copies == 0
+    assert rep.prefix_cache_evictions == 0
+    assert rep.results[0].tokens == rep.results[1].tokens
+
+
+# -- kernels-forced leg -----------------------------------------------------
+
+
+@pytest.fixture
+def force_kernels():
+    """Force the Pallas paged-attention kernels (interpret mode works on
+    CPU): the kernel walks the block table directly, so prefix sharing
+    must be invisible to it exactly as to the XLA gather path."""
+    prev = kops.set_interpret(True)
+    yield
+    kops.set_interpret(prev)
+
+
+def test_kernels_forced_sharing_bitwise(model, programmed, force_kernels):
+    """Full-hit + COW scenario with the paged-attention kernels forced:
+    cached and cold runs agree bitwise under the kernel too."""
+    cfg, _ = model
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    other = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    reqs = lambda: [
+        Request(rid=0, tokens=shared, max_new_tokens=4),
+        Request(rid=1, tokens=other, max_new_tokens=1),
+        Request(rid=2, tokens=shared, max_new_tokens=2),
+    ]
+    rep = _loop(model, programmed).run(reqs())
+    rep_off = _loop(model, programmed, prefix_cache=False).run(reqs())
+    assert rep.prefix_cache_hits >= 1
+    assert rep.results[2].cached_prompt_tokens == 8
+    for a, b in zip(rep.results, rep_off.results):
+        _assert_bitwise(a, b, f"kernels-forced rid {a.rid}")
