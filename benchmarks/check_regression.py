@@ -75,6 +75,17 @@ CHECKS = (
     # reported but not gated)
     ("serve_prefix_cache ttft",
      "serve_prefix_cache.ttft_p50_cold_over_cached"),
+    # drift + zero-downtime re-programming (DESIGN.md §5): background
+    # refresh must keep removing the drift-accumulated logit error from
+    # the oldest traffic (deterministic — fake device clock, greedy,
+    # first-token logits vs the digital reference), and the median
+    # inter-token latency must stay ~unchanged with refresh enabled
+    # (the re-program is dispatched off the request path; p95 is
+    # reported but not gated — see bench_serve_drift_refresh)
+    ("serve_drift_refresh accuracy",
+     "serve_drift_refresh.err_last_wave_stale_over_refreshed"),
+    ("serve_drift_refresh itl",
+     "serve_drift_refresh.itl_p50_stale_over_refreshed"),
     # Pallas serving kernels (deterministic indicators — interpret-mode
     # wall time is meaningless on the CPU runner, so the gate pins the
     # numerics contract and the analytic traffic wins instead):

@@ -21,7 +21,7 @@ from repro.configs import get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.models import init_params
-from repro.serve import Request, ServeLoop, greedy_generate
+from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
 
 
 def main():
@@ -38,8 +38,9 @@ def main():
         rng.integers(0, cfg.vocab, size=l).astype(np.int32) for l in lens
     ]
     loop = ServeLoop(
-        params, cfg, policy=policy, slots=3, max_len=48,
-        compute_dtype=jnp.float32,
+        params, cfg,
+        ServeConfig(policy=policy, slots=3, max_len=48,
+                    compute_dtype=jnp.float32),
     )
     report = loop.run(
         [Request(rid=i, tokens=p, max_new_tokens=12)
@@ -69,9 +70,10 @@ def main():
         for l in (4, 7, 5)
     ]
     chunked = ServeLoop(
-        params, cfg, policy=policy, slots=4, max_len=112,
-        prefill_chunk=16, block_size=16,
-        compute_dtype=jnp.float32, programmed=loop.programmed,
+        params, cfg, ServeConfig(
+            policy=policy, slots=4, max_len=112,
+            prefill_chunk=16, block_size=16, compute_dtype=jnp.float32,
+        ), programmed=loop.programmed,
     )
     reqs = [Request(rid=0, tokens=long_prompt, max_new_tokens=8)] + [
         Request(rid=i + 1, tokens=p, max_new_tokens=8)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .device import noisy_slice_values
+from .drift import drift_now
 from .engine import DPEConfig
 from .quant import adc_quantize, block_scale, dac_quantize, quantize
 from .slicing import SliceSpec, slice_int, slice_significances
@@ -61,10 +62,16 @@ class PreparedWeight(NamedTuple):
 
     slices: (Sw, Kp, Np) float32 — noisy slice values (analog domain).
     scale:  (nk, nn)     float32 — per-block quant / pre-alignment scale.
+    t_prog: ()           float32 — device-clock programming timestamp of
+            this generation (drift reference point), or ``None`` when the
+            state is untimed (drift then never applies; ``None`` adds no
+            pytree leaf, so direct ``prepare_weight`` callers see the same
+            leaf structure as before).
     """
 
     slices: jax.Array
     scale: jax.Array
+    t_prog: jax.Array | None = None
 
 
 class FoldedWeight(NamedTuple):
@@ -72,9 +79,10 @@ class FoldedWeight(NamedTuple):
     weight (Kp, Np) in ``cfg.store_dtype`` (see :func:`fold_weight_noisy`).
     O(K*N) memory instead of the O(Sw*K*N) slice stack — what a
     weight-stationary deployment keeps resident per fast-mode layer
-    (DESIGN.md §5)."""
+    (DESIGN.md §5).  ``t_prog`` as on :class:`PreparedWeight`."""
 
     w_eff: jax.Array
+    t_prog: jax.Array | None = None
 
 
 def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -490,16 +498,45 @@ def resolve_backend(cfg: DPEConfig) -> str:
     return "xla"
 
 
+def _drift_factor(
+    cfg: DPEConfig, t_prog, t_now
+) -> jax.Array | None:
+    """Multiplicative conductance-decay factor for programmed state aged
+    from ``t_prog`` to ``t_now``, or ``None`` when drift does not apply
+    (no model configured, untimed state, or no clock published).  The
+    ``None`` path adds nothing to the traced graph — the bitwise-off
+    contract for ``cfg.drift is None`` (DESIGN.md §5)."""
+    if cfg.drift is None or t_prog is None:
+        return None
+    if t_now is None:
+        t_now = drift_now()
+    if t_now is None:
+        return None
+    dt = jnp.asarray(t_now, jnp.float32) - jnp.asarray(t_prog, jnp.float32)
+    return cfg.drift.factor(dt)
+
+
 def dpe_matmul_prepared(
     x: jax.Array,
     pw: PreparedWeight,
     n: int,
     cfg: DPEConfig,
+    t_now: jax.Array | None = None,
 ) -> jax.Array:
-    """``x @ w`` through an already-programmed weight (any leading dims)."""
+    """``x @ w`` through an already-programmed weight (any leading dims).
+
+    Drift (when ``cfg.drift`` is set, the state carries ``t_prog`` and a
+    device clock is available) decays the stored slice values *before*
+    the analog matmul + ADC — slice units are linear in the conductance
+    window, so one scalar multiply on the slice stack models every cell
+    of every tile aging uniformly, identically on the xla, pallas and
+    circuit backends."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     xm = x.reshape(-1, k)
+    f = _drift_factor(cfg, pw.t_prog, t_now)
+    if f is not None:
+        pw = pw._replace(slices=pw.slices * f)
     backend = resolve_backend(cfg)
     if backend == "pallas" and cfg.mode == "faithful":
         # fused kernel: prepare_input (quantise + slice + DAC) runs
@@ -529,17 +566,29 @@ def dpe_matmul_folded(
     fw: FoldedWeight,
     n: int,
     cfg: DPEConfig,
+    t_now: jax.Array | None = None,
 ) -> jax.Array:
-    """Fast-mode ``x @ w`` through an already-folded noisy weight."""
+    """Fast-mode ``x @ w`` through an already-folded noisy weight.
+
+    Drift commutes exactly through the digital fold (the fold is linear
+    in the slice values), so decaying ``w_eff`` equals decaying every
+    slice — applied in ``store_dtype`` so the drift-at-0 identity stays
+    bitwise."""
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
+    f = _drift_factor(cfg, fw.t_prog, t_now)
+    if f is not None:
+        fw = fw._replace(w_eff=fw.w_eff * f.astype(fw.w_eff.dtype))
     x_deq = fake_quant_input(xm, cfg).astype(fw.w_eff.dtype)
     y = (x_deq @ fw.w_eff)[:, :n]
     return y.reshape(*lead, n).astype(jnp.float32)
 
 
 def program_weight(
-    w: jax.Array, cfg: DPEConfig | None, key: jax.Array | None = None
+    w: jax.Array,
+    cfg: DPEConfig | None,
+    key: jax.Array | None = None,
+    t_prog: jax.Array | None = None,
 ) -> PreparedWeight | FoldedWeight | None:
     """Program one weight matrix for ``cfg``'s mode (the weight-stationary
     ``update_weight()`` artifact, DESIGN.md §5).
@@ -547,18 +596,23 @@ def program_weight(
     Returns the per-layer programmed state a serving deployment keeps
     resident: :class:`PreparedWeight` (faithful / circuit — slices +
     block scales), :class:`FoldedWeight` (fast — store_dtype-compressed
-    effective weight), or ``None`` for digital layers.
+    effective weight), or ``None`` for digital layers.  ``t_prog`` stamps
+    the generation's device-clock programming time (drift reference);
+    ``None`` leaves the state untimed (drift never applies to it).
 
     Determinism contract: programming is a pure function of
     ``(w, cfg, key)`` — the same key yields bit-identical state, which is
     what lets a weight-stationary deployment re-program only when the key
-    changes (DESIGN.md §5).
+    changes (DESIGN.md §5).  ``t_prog`` stamps metadata only; it never
+    perturbs the programmed values.
     """
     if cfg is None or cfg.mode == "digital":
         return None
+    if t_prog is not None:
+        t_prog = jnp.asarray(t_prog, jnp.float32)
     if cfg.mode == "fast":
-        return FoldedWeight(fold_weight_noisy(w, cfg, key))
-    return prepare_weight(w, cfg, key)
+        return FoldedWeight(fold_weight_noisy(w, cfg, key), t_prog=t_prog)
+    return prepare_weight(w, cfg, key)._replace(t_prog=t_prog)
 
 
 def dpe_apply(
@@ -566,12 +620,15 @@ def dpe_apply(
     prog: PreparedWeight | FoldedWeight,
     n: int,
     cfg: DPEConfig,
+    t_now: jax.Array | None = None,
 ) -> jax.Array:
     """``x @ w`` through programmed state from :func:`program_weight` —
-    the decode-loop hot path pays only ``prepare_input`` + the GEMM."""
+    the decode-loop hot path pays only ``prepare_input`` + the GEMM.
+    When ``t_now`` is None the device clock published by
+    :func:`repro.core.drift.drift_clock` (if any) drives drift."""
     if isinstance(prog, FoldedWeight):
-        return dpe_matmul_folded(x, prog, n, cfg)
-    return dpe_matmul_prepared(x, prog, n, cfg)
+        return dpe_matmul_folded(x, prog, n, cfg, t_now)
+    return dpe_matmul_prepared(x, prog, n, cfg, t_now)
 
 
 def dpe_matmul(

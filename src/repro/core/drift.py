@@ -1,0 +1,105 @@
+"""Conductance drift — time-parameterised decay of programmed state.
+
+Real memristive conductances relax after programming (PCM-style
+structural relaxation): a cell programmed to ``G0`` at time ``t_prog``
+reads back at ``t > t_prog`` as
+
+    G(t) - LGS = (G0 - LGS) * (1 + dt/t0) ** (-nu)        (power law)
+    G(t) - LGS = (G0 - LGS) * exp(-dt/tau)                (exponential)
+
+Both laws decay the *programmable window* (G - LGS), so in slice units
+``v = (G - LGS) / dG`` drift is a pure multiplicative factor on the
+stored slice values — which is why :func:`repro.core.dpe.dpe_apply` can
+apply it as one scalar multiply on the slice stack (faithful/circuit)
+or on the folded effective weight (fast mode; folding is linear in the
+slice values, so the scalar commutes through it exactly).
+
+Key properties (pinned by tests/test_drift_refresh.py):
+
+- ``factor(0) == 1.0`` exactly, and ``x * 1.0`` is a bitwise identity —
+  a freshly-programmed generation reads back bit-identical.
+- ``drift=None`` on :class:`repro.core.engine.DPEConfig` (the default)
+  never touches the apply path at all: the traced graph is identical to
+  a build without this module (bitwise-off contract).
+
+Time plumbing: the serve loop samples ONE device-clock value per
+scheduler iteration and publishes it to the jitted step bodies through
+the :func:`drift_clock` context manager (same module-global pattern as
+``repro.distributed.sharding.rules_context``), so the ~30 ``dense()``
+call sites in models/* never thread a ``t_now`` argument.  The context
+is active *during tracing*; the published value is a traced scalar, so
+retracing is keyed by the jitted step's explicit ``t_now`` argument,
+not by the context object.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DriftModel", "drift_clock", "drift_now"]
+
+
+@dataclass(frozen=True)
+class DriftModel:
+    """Time-parameterised conductance decay (frozen + hashable so a
+    ``DPEConfig`` carrying one stays a valid static jit argument).
+
+    kind: "power" — (1 + dt/t0)**(-nu), the PCM drift law; ``nu`` is
+          the drift coefficient (typ. 0.01–0.1) and ``t0`` the
+          normalisation time in device-clock seconds.
+          "exp" — exp(-dt/tau) structural relaxation with time constant
+          ``tau`` seconds.
+    """
+
+    kind: str = "power"
+    nu: float = 0.05
+    t0: float = 1.0
+    tau: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("power", "exp"):
+            raise ValueError(f"bad drift kind {self.kind!r}")
+        if self.kind == "power" and (self.nu < 0.0 or self.t0 <= 0.0):
+            raise ValueError("power drift needs nu >= 0 and t0 > 0")
+        if self.kind == "exp" and self.tau <= 0.0:
+            raise ValueError("exp drift needs tau > 0")
+
+    def factor(self, dt: jax.Array) -> jax.Array:
+        """Multiplicative decay of the programmable window after ``dt``
+        seconds.  Exactly 1.0 at ``dt <= 0`` (fresh generations read
+        back bit-identical; a clock skew can never *grow* conductance).
+        """
+        dt = jnp.maximum(jnp.asarray(dt, jnp.float32), 0.0)
+        if self.kind == "power":
+            return (1.0 + dt / self.t0) ** (-self.nu)
+        return jnp.exp(-dt / self.tau)
+
+
+# --- device-clock context -------------------------------------------------
+# The serving step functions publish "now" (a traced f32 scalar, seconds on
+# the device clock) here while tracing their bodies; dpe_apply reads it so
+# drift needs no per-call-site plumbing.  None => no drift evaluation.
+_DRIFT_NOW: list = []
+
+
+@contextmanager
+def drift_clock(t_now):
+    """Publish the device-clock time for ``dpe_apply`` drift evaluation
+    within the dynamic extent (``None`` is a no-op)."""
+    if t_now is None:
+        yield
+        return
+    _DRIFT_NOW.append(t_now)
+    try:
+        yield
+    finally:
+        _DRIFT_NOW.pop()
+
+
+def drift_now():
+    """Current published device-clock time, or ``None`` outside any
+    :func:`drift_clock` context."""
+    return _DRIFT_NOW[-1] if _DRIFT_NOW else None

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+from .drift import DriftModel
 from .presets import INT8
 from .slicing import SliceSpec
 
@@ -68,6 +69,11 @@ class DPEConfig:
     # dtype for folded/effective weights in fast mode ("f32" | "bf16").
     # bf16 rounding (<=0.4% rel) is far below the 5% programming noise.
     store_dtype: str = "f32"
+    # Conductance drift model (repro.core.drift.DriftModel) applied at
+    # dpe_apply time from the programming timestamp carried on
+    # PreparedWeight/FoldedWeight.  None (default) is bitwise-off: the
+    # apply path traces identically to a drift-free build.
+    drift: DriftModel | None = None
 
     def __post_init__(self):
         if self.mode not in ("faithful", "fast", "digital"):
@@ -89,6 +95,10 @@ class DPEConfig:
                 )
         if self.hgs <= self.lgs:
             raise ValueError("need HGS > LGS")
+        if self.drift is not None and not isinstance(self.drift, DriftModel):
+            raise ValueError(
+                f"drift must be a DriftModel or None, got {self.drift!r}"
+            )
 
     @property
     def cv(self) -> float:

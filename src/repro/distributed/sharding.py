@@ -336,6 +336,12 @@ def programmed_sharding_rules(programmed, mesh: Mesh, rules: dict | None = None)
         # K local (bitwise-reuse contract, see module comment); N inherits
         kn = (None, axes[-1]) if len(axes) >= 2 else (None, None)
         stacked = tuple(axes[:-2])
+        # t_prog programming timestamps (drift reference, DESIGN.md §5)
+        # are O(1) scalars per node — replicated, whatever their
+        # stack rank (scan / expert axes broadcast by program_params).
+        def t_sh(t):
+            return None if t is None else NamedSharding(mesh, P())
+
         if isinstance(node, FoldedWeight):
             # FoldedWeight is a plain (K, N) effective weight — no block
             # structure survives folding, so divide at element granularity
@@ -344,7 +350,9 @@ def programmed_sharding_rules(programmed, mesh: Mesh, rules: dict | None = None)
                 lead_axes_for(stacked, lead) + kn, mesh, rules,
                 tuple(node.w_eff.shape),
             )
-            return FoldedWeight(w_eff=NamedSharding(mesh, spec))
+            return FoldedWeight(
+                w_eff=NamedSharding(mesh, spec), t_prog=t_sh(node.t_prog)
+            )
         lead = node.slices.ndim - 3  # layer-scan / expert-stack axes
         lead_axes = lead_axes_for(stacked, lead)
         nn = node.scale.shape[-1]
@@ -364,6 +372,7 @@ def programmed_sharding_rules(programmed, mesh: Mesh, rules: dict | None = None)
         return PreparedWeight(
             slices=NamedSharding(mesh, spec_sl),
             scale=NamedSharding(mesh, spec_sc),
+            t_prog=t_sh(node.t_prog),
         )
 
     return jax.tree_util.tree_map_with_path(

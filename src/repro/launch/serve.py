@@ -39,27 +39,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as arch_configs
+from repro.core import DriftModel
 from repro.launch.dryrun import make_policy
 from repro.models import init_params, program_params, programmed_byte_size
-from repro.serve import Request, ServeLoop, greedy_generate
+from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
+
+
+def _onoff(ap, name, default, help):
+    # normalized boolean flag convention: --flag / --flag on / --flag off
+    ap.add_argument(name, nargs="?", const="on", default=default,
+                    choices=("on", "off"), help=help)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--smoke", action="store_true")
+    _onoff(ap, "--smoke", "off", "tiny smoke-sized architecture")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="digital",
                     choices=["digital", "mem_fast", "mem_faithful"])
-    ap.add_argument("--per_call", action="store_true",
-                    help="re-program every call (legacy path) instead of "
-                         "programming once")
-    ap.add_argument("--shard_model", type=int, default=0,
+    _onoff(ap, "--per_call", "off",
+           "re-program every call (legacy path) instead of programming "
+           "once")
+    ap.add_argument("--shard_model", type=int, default=None,
                     help="shard the programmed state over N local devices "
                          "(model mesh axis, programmed_sharding_rules); "
-                         "0/1 = replicated")
+                         "default replicated")
     ap.add_argument("--requests", type=int, default=0,
                     help="serve N variable-length requests through the "
                          "continuous-batching engine instead of one "
@@ -73,16 +80,16 @@ def main(argv=None):
                          "with --rate")
     ap.add_argument("--rate", type=float, default=50.0,
                     help="Poisson arrival rate (requests/s)")
-    ap.add_argument("--max_len", type=int, default=0,
-                    help="KV arena length per slot (0 = fitted to the "
-                         "workload)")
+    ap.add_argument("--max_len", type=int, default=None,
+                    help="KV arena length per slot (default: fitted to "
+                         "the workload)")
     ap.add_argument("--prefill_chunk", type=int, default=32,
                     help="prefill chunk length in tokens (0 = unchunked: "
                          "one bucket-padded chunk per prompt)")
     ap.add_argument("--block_size", type=int, default=16,
                     help="paged KV arena block size in tokens")
-    ap.add_argument("--kv_blocks", type=int, default=0,
-                    help="total paged-arena blocks (0 = slots x "
+    ap.add_argument("--kv_blocks", type=int, default=None,
+                    help="total paged-arena blocks (default: slots x "
                          "ceil(max_len/block_size) + trash block)")
     ap.add_argument("--prefix_cache", nargs="?", const="on", default="on",
                     choices=("on", "off"),
@@ -100,7 +107,20 @@ def main(argv=None):
                          "(XLA oracle paths), interpret (force the "
                          "kernels in interpret mode — CPU CI / "
                          "differential debugging), on (force compiled)")
+    ap.add_argument("--refresh_every", type=float, default=None,
+                    help="device-clock seconds between background "
+                         "crossbar re-programs (generation N+1 swapped "
+                         "in at request boundaries; default: never)")
+    _onoff(ap, "--drift", "off",
+           "conductance drift on the programmed state (power-law decay "
+           "aged by the device clock; see also --drift_nu/--drift_t0)")
+    ap.add_argument("--drift_nu", type=float, default=0.05,
+                    help="power-law drift exponent nu")
+    ap.add_argument("--drift_t0", type=float, default=1.0,
+                    help="power-law drift reference time t0 (seconds)")
     args = ap.parse_args(argv)
+    args.smoke = args.smoke == "on"
+    args.per_call = args.per_call == "on"
     if args.kernels != "auto":
         from repro.kernels import ops as _kops
 
@@ -111,14 +131,15 @@ def main(argv=None):
         else:  # "on": compiled kernels even off-TPU (will fail on CPU)
             _kops.set_kernels_enabled(True)
             _kops.set_interpret(False)
-    if args.shard_model > 1:
+    shard_model = args.shard_model or 0
+    if shard_model > 1:
         # must land before jax initialises its backends; only affects the
         # host (CPU) platform — real accelerator device counts win
         import os
 
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.shard_model}"
+            + f" --xla_force_host_platform_device_count={shard_model}"
         ).strip()
 
     cfg = (
@@ -129,6 +150,8 @@ def main(argv=None):
     policy = make_policy(args.policy)
     if args.requests:
         policy = _row_independent(policy)
+    if args.drift == "on":
+        policy = _with_drift(policy, args.drift_nu, args.drift_t0)
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
@@ -145,10 +168,10 @@ def main(argv=None):
             (args.batch, cfg.encoder.n_frames, cfg.d_model),
         )
     mesh = None
-    if args.shard_model > 1:
+    if shard_model > 1:
         from repro.launch.mesh import make_test_mesh
 
-        mesh = make_test_mesh((1, args.shard_model))
+        mesh = make_test_mesh((1, shard_model))
     programmed = None
     if not args.per_call and policy.enabled:
         t0 = time.time()
@@ -171,7 +194,7 @@ def main(argv=None):
               f"{time.time() - t0:.2f}s")
         if sh is not None:
             per = programmed_byte_size(programmed, sh) / 1e6
-            print(f"sharded over {args.shard_model} devices: "
+            print(f"sharded over {shard_model} devices: "
                   f"{per:.1f} MB/device resident")
     if args.requests:
         return _serve_continuous(args, cfg, policy, params, programmed, mesh)
@@ -212,6 +235,21 @@ def _row_independent(policy):
     )
 
 
+def _with_drift(policy, nu, t0):
+    """Attach a power-law conductance :class:`DriftModel` to every DPE
+    config of the policy — programmed state then ages by the serve
+    loop's device clock until the next re-program (DESIGN.md §5)."""
+    from dataclasses import replace as dc_replace
+
+    drift = DriftModel(kind="power", nu=nu, t0=t0)
+    fix = lambda c: None if c is None else c.replace(drift=drift)
+    return dc_replace(
+        policy,
+        default=fix(policy.default),
+        overrides=tuple((pat, fix(c)) for pat, c in policy.overrides),
+    )
+
+
 def _serve_continuous(args, cfg, policy, params, programmed, mesh):
     """Continuous-batching mode: N variable-length requests through a
     K-slot table over one shared programmed state (DESIGN.md §7)."""
@@ -232,13 +270,16 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         lens.max() + args.shared_prefix + args.gen + 1
     )
     loop = ServeLoop(
-        params, cfg, policy=policy, slots=args.slots, max_len=max_len,
-        prefill_chunk=args.prefill_chunk or None,
-        block_size=args.block_size,
-        kv_blocks=args.kv_blocks or None,
-        compute_dtype=jnp.float32, programmed=programmed,
-        weight_stationary=not args.per_call, mesh=mesh,
-        prefix_cache=args.prefix_cache == "on",
+        params, cfg, ServeConfig(
+            policy=policy, slots=args.slots, max_len=max_len,
+            prefill_chunk=args.prefill_chunk or None,
+            block_size=args.block_size,
+            kv_blocks=args.kv_blocks or None,
+            compute_dtype=jnp.float32,
+            weight_stationary=not args.per_call, mesh=mesh,
+            prefix_cache=args.prefix_cache == "on",
+            refresh_every=args.refresh_every,
+        ), programmed=programmed,
     )
     reqs = [
         Request(
@@ -300,6 +341,10 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         f"{report.prefix_cache_evictions} evictions, "
         f"{report.prefill_chunks_run} prefill chunks run"
     )
+    if args.refresh_every is not None:
+        print(f"crossbar refresh: {report.reprogram_swaps} generation "
+              f"swaps (every {args.refresh_every:g}s of device time)")
+    print("counters:", report.counters())
     print("sample:", report.results[0].tokens[:16])
     return report
 

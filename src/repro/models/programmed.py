@@ -46,17 +46,17 @@ from .transformer import group_size
 __all__ = ["program_params", "programmed_byte_size"]
 
 
-def _prog_dense(p: dict, name: str, rng, policy: MemPolicy):
+def _prog_dense(p: dict, name: str, rng, policy: MemPolicy, t_prog):
     """Programmed state for one dense param dict ({"w": ..}) or None."""
     cfg = policy.config_for(name)
     if cfg is None or cfg.mode == "digital":
         return None
-    return program_weight(p["w"], cfg, layer_key(rng, name))
+    return program_weight(p["w"], cfg, layer_key(rng, name), t_prog)
 
 
-def _prog_attn(p: dict, name: str, rng, policy: MemPolicy):
+def _prog_attn(p: dict, name: str, rng, policy: MemPolicy, t_prog):
     return {
-        pk: _prog_dense(p[pk], f"{name}.{suffix}", rng, policy)
+        pk: _prog_dense(p[pk], f"{name}.{suffix}", rng, policy, t_prog)
         for pk, suffix in (
             ("q_proj", "q"),
             ("k_proj", "k"),
@@ -83,16 +83,20 @@ _MAMBA_PROJ = (
 )
 
 
-def _prog_ssm(p: dict, name: str, rng, policy: MemPolicy):
+def _prog_ssm(p: dict, name: str, rng, policy: MemPolicy, t_prog):
     table = _RWKV6_PROJ if "r_proj" in p else _MAMBA_PROJ
     return {
-        pk: _prog_dense(p[pk], f"{name}.{suffix}", rng, policy)
+        pk: _prog_dense(p[pk], f"{name}.{suffix}", rng, policy, t_prog)
         for pk, suffix in table
     }
 
 
-def _prog_moe(p: dict, name: str, rng, policy: MemPolicy):
-    out = {"router": _prog_dense(p["router"], f"{name}.router", rng, policy)}
+def _prog_moe(p: dict, name: str, rng, policy: MemPolicy, t_prog):
+    out = {
+        "router": _prog_dense(
+            p["router"], f"{name}.router", rng, policy, t_prog
+        )
+    }
     mem_cfg = policy.config_for(f"{name}.experts")
     if mem_cfg is not None and mem_cfg.mode != "digital":
         # mirror moe_block's per-expert key schedule: fold_in(key, i) with
@@ -103,7 +107,7 @@ def _prog_moe(p: dict, name: str, rng, policy: MemPolicy):
         def stack(w, i0):
             return jax.vmap(
                 lambda w2, i: program_weight(
-                    w2, mem_cfg, jax.random.fold_in(key, i)
+                    w2, mem_cfg, jax.random.fold_in(key, i), t_prog
                 )
             )(w, jnp.arange(e) + i0)
 
@@ -115,73 +119,81 @@ def _prog_moe(p: dict, name: str, rng, policy: MemPolicy):
     return out
 
 
-def _prog_ffn(p: dict, name: str, rng, policy: MemPolicy):
+def _prog_ffn(p: dict, name: str, rng, policy: MemPolicy, t_prog):
     if "moe" in p:
-        return {"moe": _prog_moe(p["moe"], name, rng, policy)}
+        return {"moe": _prog_moe(p["moe"], name, rng, policy, t_prog)}
     mlp = p["mlp"]
     return {
         "mlp": {
-            k: _prog_dense(mlp[k], f"{name}.mlp.{k}", rng, policy)
+            k: _prog_dense(mlp[k], f"{name}.mlp.{k}", rng, policy, t_prog)
             for k in ("wi", "wg", "wo")
         }
     }
 
 
-def _prog_layer(p: dict, cfg: ArchConfig, layer_idx: int, rng, policy):
+def _prog_layer(
+    p: dict, cfg: ArchConfig, layer_idx: int, rng, policy, t_prog
+):
     kind, _ = cfg.layer_kind(layer_idx)
     name = f"L.{kind}"
     out = {}
     if kind == "attn":
-        out["attn"] = _prog_attn(p["attn"], name, rng, policy)
+        out["attn"] = _prog_attn(p["attn"], name, rng, policy, t_prog)
     else:
-        out["ssm"] = _prog_ssm(p["ssm"], name, rng, policy)
-    out.update(_prog_ffn(p, name, rng, policy))
+        out["ssm"] = _prog_ssm(p["ssm"], name, rng, policy, t_prog)
+    out.update(_prog_ffn(p, name, rng, policy, t_prog))
     return out
 
 
-def _prog_block(p: dict, cfg: ArchConfig, template_idx: int, rng, policy):
+def _prog_block(
+    p: dict, cfg: ArchConfig, template_idx: int, rng, policy, t_prog
+):
     """One scan step (a single layer or a hybrid group) — mirrors
     ``block_forward``'s structure and its shared-rng group convention."""
     g = group_size(cfg)
     if g == 1:
-        return _prog_layer(p, cfg, template_idx, rng, policy)
+        return _prog_layer(p, cfg, template_idx, rng, policy, t_prog)
     return {
-        f"l{j}": _prog_layer(p[f"l{j}"], cfg, j, rng, policy)
+        f"l{j}": _prog_layer(p[f"l{j}"], cfg, j, rng, policy, t_prog)
         for j in range(g)
     }
 
 
-def _prog_segment(seg_p, cfg, tmpl, rng_seg, policy):
+def _prog_segment(seg_p, cfg, tmpl, rng_seg, policy, t_prog):
     """Program a stacked segment: vmap over the scan (steps) axis with the
-    per-step key fold ``fold_in(rng_seg, idx)`` used by the forward scan."""
+    per-step key fold ``fold_in(rng_seg, idx)`` used by the forward scan.
+    A scalar ``t_prog`` is broadcast onto the stack axis by vmap, so the
+    stamped leaf stays scan-compatible with the stacked slices."""
     steps = jax.tree_util.tree_leaves(seg_p)[0].shape[0]
     return jax.vmap(
         lambda p, i: _prog_block(
-            p, cfg, tmpl, jax.random.fold_in(rng_seg, i), policy
+            p, cfg, tmpl, jax.random.fold_in(rng_seg, i), policy, t_prog
         )
     )(seg_p, jnp.arange(steps))
 
 
-def _prog_encdec(params, cfg, rng, policy):
+def _prog_encdec(params, cfg, rng, policy, t_prog):
     nenc = cfg.encoder.n_layers
 
     def one_enc(p, i):
         return {
             "attn": _prog_attn(
                 p["attn"], "enc.attn", jax.random.fold_in(rng, 1000 + i),
-                policy,
+                policy, t_prog,
             ),
             "mlp": _prog_ffn(
-                p, "enc", jax.random.fold_in(rng, 2000 + i), policy
+                p, "enc", jax.random.fold_in(rng, 2000 + i), policy, t_prog
             )["mlp"],
         }
 
     def one_dec(p, i):
-        return _prog_block(p, cfg, 0, jax.random.fold_in(rng, i), policy)
+        return _prog_block(
+            p, cfg, 0, jax.random.fold_in(rng, i), policy, t_prog
+        )
 
     def one_cross(p, i):
         return _prog_attn(
-            p, "dec.cross", jax.random.fold_in(rng, i), policy
+            p, "dec.cross", jax.random.fold_in(rng, i), policy, t_prog
         )
 
     nl = cfg.n_layers
@@ -197,20 +209,26 @@ def _prog_encdec(params, cfg, rng, policy):
             )
         },
         "cross": jax.vmap(one_cross)(params["cross"], jnp.arange(nl)),
-        "lm_head": _prog_dense(params["lm_head"], "lm_head", rng, policy),
+        "lm_head": _prog_dense(
+            params["lm_head"], "lm_head", rng, policy, t_prog
+        ),
     }
 
 
-def _program_params_body(params, cfg: ArchConfig, policy: MemPolicy, rng):
+def _program_params_body(
+    params, cfg: ArchConfig, policy: MemPolicy, rng, t_prog=None
+):
     if cfg.encoder is not None:
-        return _prog_encdec(params, cfg, rng, policy)
+        return _prog_encdec(params, cfg, rng, policy, t_prog)
     prog = {"blocks": {}}
     for si, (start, steps, tmpl) in enumerate(segments(cfg)):
         prog["blocks"][f"seg{si}"] = _prog_segment(
             params["blocks"][f"seg{si}"], cfg, tmpl,
-            jax.random.fold_in(rng, si), policy,
+            jax.random.fold_in(rng, si), policy, t_prog,
         )
-    prog["lm_head"] = _prog_dense(params["lm_head"], "lm_head", rng, policy)
+    prog["lm_head"] = _prog_dense(
+        params["lm_head"], "lm_head", rng, policy, t_prog
+    )
     return prog
 
 
@@ -227,6 +245,7 @@ def program_params(
     *,
     out_shardings=None,
     mesh=None,
+    t_prog=0.0,
 ):
     """Program every hardware layer of a model once (weight-stationary).
 
@@ -250,24 +269,34 @@ def program_params(
     every leaf materialises directly in its decode-time layout instead of
     replicate-then-reshard, and per-device programmed HBM shrinks with
     the model axis (DESIGN.md §6).
+
+    ``t_prog`` is the device-clock programming time stamped onto every
+    programmed node (the drift reference a refresh advances; DESIGN.md
+    §5).  It is a traced scalar — re-programming at a new time re-runs
+    the SAME compiled program — and defaults to 0.0 (generation zero).
+    Pass ``t_prog=None`` for untimed state with the pre-drift leaf
+    structure.
     """
     rng = jax.random.PRNGKey(0) if rng is None else rng
     if policy is None or not policy.enabled:
         return None
+    if t_prog is not None:
+        t_prog = jnp.asarray(t_prog, jnp.float32)
     if out_shardings is None and mesh is not None:
         from repro.distributed.sharding import programmed_sharding_rules
 
         prog_abs = jax.eval_shape(
-            lambda p, r: _program_params_body(p, cfg, policy, r), params, rng
+            lambda p, r, t: _program_params_body(p, cfg, policy, r, t),
+            params, rng, t_prog,
         )
         out_shardings = programmed_sharding_rules(prog_abs, mesh)
     if out_shardings is None:
-        return _program_params_impl(params, cfg, policy, rng)
+        return _program_params_impl(params, cfg, policy, rng, t_prog)
     fn = jax.jit(
         _program_params_body, static_argnums=(1, 2),
         out_shardings=out_shardings,
     )
-    return fn(params, cfg, policy, rng)
+    return fn(params, cfg, policy, rng, t_prog)
 
 
 def programmed_byte_size(programmed, shardings=None) -> int:

@@ -1,3 +1,11 @@
+"""Public serving surface (DESIGN.md §7).
+
+The stable API is the explicit ``__all__`` below — build a
+:class:`ServeConfig`, hand it to :class:`ServeLoop`, read the
+:class:`ServeReport` (its ``counters()`` mapping is the stable counter
+surface).  Step-maker helpers (``make_*``) and ``greedy_generate`` are
+the lower-level building blocks the loop is assembled from.
+"""
 from .batching import (
     Request,
     RequestQueue,
@@ -6,6 +14,7 @@ from .batching import (
     ServeReport,
     default_buckets,
 )
+from .config import ReproDeprecationWarning, ServeConfig
 from .engine import (
     greedy_generate,
     make_chunk_prefill,
@@ -16,17 +25,21 @@ from .engine import (
 from .prefix_cache import AdmitPlan, PrefixCache
 
 __all__ = [
-    "AdmitPlan",
+    # the serving API
+    "ServeLoop",
+    "ServeConfig",
+    "ServeReport",
+    "Request",
+    "RequestResult",
     "PrefixCache",
+    # supporting surface
+    "AdmitPlan",
+    "ReproDeprecationWarning",
+    "RequestQueue",
+    "default_buckets",
+    "greedy_generate",
     "make_prefill_step",
     "make_slot_prefill",
     "make_chunk_prefill",
     "make_decode_step",
-    "greedy_generate",
-    "Request",
-    "RequestQueue",
-    "RequestResult",
-    "ServeLoop",
-    "ServeReport",
-    "default_buckets",
 ]

@@ -42,6 +42,7 @@ from __future__ import annotations
 import contextlib
 import heapq
 import time
+import warnings
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -56,6 +57,7 @@ from repro.kernels import ops as _kops
 from repro.models import program_params
 from repro.models.model import copy_paged_block, init_paged_cache
 
+from .config import ReproDeprecationWarning, ServeConfig
 from .engine import make_chunk_prefill, make_decode_step
 from .prefix_cache import PrefixCache
 
@@ -63,6 +65,7 @@ __all__ = [
     "Request",
     "RequestResult",
     "RequestQueue",
+    "ServeConfig",
     "ServeLoop",
     "ServeReport",
     "default_buckets",
@@ -186,7 +189,32 @@ class ServeReport:
     prefix_cache_cow_copies: int = 0
     admission_deferrals: int = 0
     prefill_chunks_run: int = 0
+    reprogram_swaps: int = 0
     trace: list | None = None
+
+    #: the stable counter surface — ``counters()`` keys, in order.  New
+    #: counters are added HERE (and to the dataclass), so callers consume
+    #: one documented mapping instead of importing ad-hoc fields.
+    COUNTER_FIELDS = (
+        "decode_steps",
+        "generated_tokens",
+        "kv_blocks",
+        "kv_blocks_reused",
+        "prefix_cache_hits",
+        "prefix_cache_misses",
+        "prefix_cache_evictions",
+        "prefix_cache_cow_copies",
+        "admission_deferrals",
+        "prefill_chunks_run",
+        "reprogram_swaps",
+    )
+
+    def counters(self) -> dict:
+        """Stable name → int mapping of every scheduler counter
+        (``COUNTER_FIELDS`` order).  ``reprogram_swaps`` counts completed
+        generation swaps: background re-programs whose fresh state new
+        admissions picked up (DESIGN.md §5)."""
+        return {k: int(getattr(self, k)) for k in self.COUNTER_FIELDS}
 
     @property
     def tok_per_s(self) -> float:
@@ -265,7 +293,9 @@ def _kernel_state():
 @lru_cache(maxsize=None)
 def _jit_chunk_cached(cfg, policy, compute_dtype, mesh, kernel_state):
     fn = make_chunk_prefill(cfg, policy, compute_dtype=compute_dtype)
-    # donate the arena: chunk KV writes alias the previous buffer
+    # donate the arena: chunk KV writes alias the previous buffer.
+    # t_now (trailing arg) is the traced drift-clock scalar — None when
+    # drift is off, which traces the identical pre-drift graph.
     return jax.jit(fn, donate_argnums=(1,))
 
 
@@ -277,8 +307,8 @@ def _jit_chunk(cfg, policy, compute_dtype, mesh):
 def _jit_decode_cached(cfg, policy, compute_dtype, mesh, kernel_state):
     fn = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
 
-    def step(params, cache, tokens, programmed, active):
-        logits, cache = fn(params, cache, tokens, programmed, active)
+    def step(params, cache, tokens, programmed, active, t_now):
+        logits, cache = fn(params, cache, tokens, programmed, active, t_now)
         return logits, jnp.argmax(logits, axis=-1), cache
 
     # donate the arena: each step's KV writes alias the previous buffer
@@ -340,6 +370,11 @@ class _SlotState:
     request: Request
     admit_time: float
     plan: object  # prefix_cache.AdmitPlan — owns the block references
+    # the programmed generation this request was admitted on: the lane
+    # runs EVERY chunk and decode step against this exact pytree until it
+    # retires (the no-mid-request-swap rule, DESIGN.md §5)
+    programmed: object = None
+    gen: int = 0
     prefill_pos: int = 0
     first_token_time: float = 0.0
     out: list = field(default_factory=list)
@@ -351,6 +386,13 @@ class _SlotState:
     @property
     def blocks(self) -> list:
         return self.plan.blocks
+
+
+#: the one-release-deprecated loose keywords of ServeLoop.__init__ —
+#: exactly the ServeConfig fields (programmed is a direct argument).
+_LEGACY_KWARGS = frozenset(
+    f.name for f in __import__("dataclasses").fields(ServeConfig)
+)
 
 
 class ServeLoop:
@@ -398,23 +440,56 @@ class ServeLoop:
         self,
         params,
         cfg,
+        config: ServeConfig | None = None,
         *,
-        policy: MemPolicy | None = None,
-        slots: int = 4,
-        max_len: int = 256,
-        prefill_chunk: int | None = None,
-        block_size: int = 16,
-        kv_blocks: int | None = None,
-        buckets: tuple[int, ...] | None = None,
-        compute_dtype=jnp.bfloat16,
         programmed=None,
-        weight_stationary: bool = True,
-        mesh=None,
-        collect_logits: bool = False,
-        collect_trace: bool = False,
-        allow_coupled_numerics: bool = False,
-        prefix_cache: bool = True,
+        **legacy,
     ):
+        """``ServeLoop(params, cfg, ServeConfig(...))`` is the supported
+        construction; ``programmed`` optionally injects a pre-built
+        generation-0 programmed pytree (an artifact, not a knob — it
+        stays a direct argument).
+
+        The legacy loose-keyword form ``ServeLoop(params, cfg,
+        policy=…, slots=…, …)`` still works for one release: the kwargs
+        are folded into a ServeConfig behind a single
+        :class:`ReproDeprecationWarning` per construction.  Mixing
+        ``config`` with legacy kwargs is an error."""
+        if legacy:
+            unknown = set(legacy) - _LEGACY_KWARGS
+            if unknown:
+                raise TypeError(
+                    f"ServeLoop got unexpected keyword(s) {sorted(unknown)}"
+                )
+            if config is not None:
+                raise TypeError(
+                    "pass EITHER a ServeConfig or legacy keywords, not "
+                    f"both (got config= and {sorted(legacy)})"
+                )
+            warnings.warn(
+                "ServeLoop(policy=..., slots=..., ...) loose keywords are "
+                "deprecated; pass ServeLoop(params, cfg, ServeConfig(...))",
+                ReproDeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServeConfig(**legacy)
+        elif config is None:
+            config = ServeConfig()
+        self.config = config
+        policy = config.policy
+        slots = config.slots
+        max_len = config.max_len
+        prefill_chunk = config.prefill_chunk
+        block_size = config.block_size
+        kv_blocks = config.kv_blocks
+        buckets = config.buckets
+        compute_dtype = config.compute_dtype
+        weight_stationary = config.weight_stationary
+        mesh = config.mesh
+        collect_logits = config.collect_logits
+        collect_trace = config.collect_trace
+        allow_coupled_numerics = config.allow_coupled_numerics
+        prefix_cache = config.prefix_cache
         if cfg.encoder is not None or cfg.vision_prefix:
             raise NotImplementedError(
                 "continuous batching needs per-request side inputs for "
@@ -498,6 +573,30 @@ class ServeLoop:
         self.prefix_cache = bool(prefix_cache)
         self._blocks = PrefixCache(
             self.kv_blocks, self.block_size, enabled=self.prefix_cache
+        )
+        # --- programmed-state generations (drift / refresh, DESIGN.md §5)
+        # ``self.programmed`` is always the CURRENT generation; lanes pin
+        # the pytree they were admitted on, so a swap never touches an
+        # in-flight request.  The generation counter persists across
+        # run() calls — re-programming is physical device state, not
+        # per-stream bookkeeping.
+        self.weight_stationary = bool(weight_stationary)
+        self.refresh_every = config.refresh_every
+        self.clock = config.clock
+        self.generation = 0
+        if self.refresh_every is not None and self.programmed is None:
+            raise ValueError(
+                "refresh_every needs weight-stationary programmed state "
+                "(a hardware policy with weight_stationary=True): there "
+                "is nothing to re-program"
+            )
+        # drift is evaluated only when some layer config carries a model:
+        # otherwise t_now stays None and the steps trace the identical
+        # drift-free graph (the bitwise-off contract)
+        self._drift_on = any(
+            c is not None and c.drift is not None
+            for _, c in (("default", self.policy.default),)
+            + tuple(self.policy.overrides)
         )
 
     # -- block allocator ----------------------------------------------------
@@ -646,6 +745,7 @@ class ServeLoop:
         deferred: Request | None = None  # ready but pool-starved
         deferrals = 0
         total_chunks = 0
+        swaps = 0
         trace: list | None = [] if self.collect_trace else None
         t0 = time.monotonic()
         decode_steps = 0
@@ -655,7 +755,51 @@ class ServeLoop:
         def now() -> float:
             return time.monotonic() - t0
 
+        # The DEVICE clock: drives drift aging and the refresh schedule.
+        # Injectable (ServeConfig.clock) so drift/refresh timing is
+        # deterministic under test; defaults to the run-relative wall
+        # clock.  Latency metrics always use the wall clock above.
+        dev_clock = self.clock or now
+        # one start-of-run sample regardless of refresh arming, so the
+        # per-iteration clock sequence (and with it drift aging) is
+        # identical whether or not background refresh is enabled
+        t_start = dev_clock()
+        next_refresh = (
+            None if self.refresh_every is None
+            else t_start + self.refresh_every
+        )
+
         while len(results) < len(requests):
+            # 0. one device-clock sample per iteration: every chunk and
+            # decode call of this iteration evaluates drift at the same
+            # instant, and the refresh trigger compares against it
+            t_dev = dev_clock()
+            t_arg = jnp.float32(t_dev) if self._drift_on else None
+            if next_refresh is not None and t_dev >= next_refresh:
+                draining = any(
+                    st is not None and st.gen != self.generation
+                    for st in slot_state
+                )
+                if not draining:
+                    # generation N+1: fresh programming noise
+                    # (fold_in(key0, gen)) and a fresh t_prog stamp,
+                    # built SHARDED like generation 0.  JAX dispatches
+                    # the programming pass asynchronously — generation N
+                    # keeps decoding below while it materialises; only a
+                    # lane that later pins gen N+1 ever blocks on it.
+                    # At most two generations are live: while old-gen
+                    # lanes drain, the next refresh waits (the
+                    # double-buffer bound on transient memory).
+                    self.generation += 1
+                    key = jax.random.fold_in(
+                        jax.random.PRNGKey(0), self.generation
+                    )
+                    self.programmed = program_params(
+                        self.params, self.cfg, self.policy, key,
+                        mesh=self.mesh, t_prog=t_dev,
+                    )
+                    swaps += 1
+                    next_refresh = t_dev + self.refresh_every
             # 1. admit: bind ready requests to free lanes, eagerly
             # allocating their full KV block need; a pool-starved
             # request waits (FIFO-first) for a retirement
@@ -689,6 +833,10 @@ class ServeLoop:
                     request=r,
                     admit_time=now(),
                     plan=plan,
+                    # swap boundary: a request takes the generation that
+                    # is current AT ADMISSION and keeps it to retirement
+                    programmed=self.programmed,
+                    gen=self.generation,
                     prefill_pos=plan.resume_pos,
                     logits=[] if self.collect_logits else None,
                 )
@@ -713,7 +861,7 @@ class ServeLoop:
                 logits, cache = self._chunk(
                     self.params, cache, jnp.asarray(toks), jnp.int32(k),
                     jnp.int32(start), jnp.int32(nv),
-                    jnp.bool_(start + nv >= plen), self.programmed,
+                    jnp.bool_(start + nv >= plen), st.programmed, t_arg,
                 )
                 st.prefill_pos = start + nv
                 st.prefill_chunks += 1
@@ -731,19 +879,42 @@ class ServeLoop:
                         next_tok[k] = t_first
                         active[k] = True
 
-            # 3. slot-parallel decode over the active lanes
+            # 3. slot-parallel decode over the active lanes — one jitted
+            # call per LIVE GENERATION (normally exactly one; during a
+            # post-refresh drain, one for the old-gen lanes and one for
+            # the new, with complementary active masks — inactive lanes
+            # write only the trash block, so the calls compose)
             decoded = int(active.sum())
             if decoded:
-                logits, toks, cache = self._decode(
-                    self.params, cache, jnp.asarray(next_tok),
-                    self.programmed, jnp.asarray(active),
+                gens = sorted(
+                    {slot_state[k].gen for k in range(K) if active[k]}
                 )
-                decode_steps += 1
-                occupancy += decoded
-                toks_np = np.asarray(toks)
-                logits_np = (
-                    np.asarray(logits) if self.collect_logits else None
-                )
+                toks_np = np.zeros((K,), np.int32)
+                logits_np = None
+                for g in gens:
+                    mask = np.array(
+                        [
+                            bool(active[k]) and slot_state[k].gen == g
+                            for k in range(K)
+                        ]
+                    )
+                    prog = next(
+                        slot_state[k].programmed
+                        for k in range(K)
+                        if mask[k]
+                    )
+                    logits, toks, cache = self._decode(
+                        self.params, cache, jnp.asarray(next_tok),
+                        prog, jnp.asarray(mask), t_arg,
+                    )
+                    decode_steps += 1
+                    occupancy += int(mask.sum())
+                    toks_np[mask] = np.asarray(toks)[mask]
+                    if self.collect_logits:
+                        l_np = np.asarray(logits)
+                        if logits_np is None:
+                            logits_np = np.zeros_like(l_np)
+                        logits_np[mask] = l_np[mask]
                 for k in range(K):
                     if not active[k]:
                         continue
@@ -794,5 +965,6 @@ class ServeLoop:
             prefix_cache_cow_copies=alloc.cow_copies,
             admission_deferrals=deferrals,
             prefill_chunks_run=total_chunks,
+            reprogram_swaps=swaps,
             trace=trace,
         )

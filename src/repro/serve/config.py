@@ -1,0 +1,107 @@
+"""The unified serving configuration surface (DESIGN.md §7).
+
+:class:`ServeLoop` grew one keyword knob per PR (slots, paging, chunking,
+prefix caching, …) until construction took 15 loose kwargs.
+:class:`ServeConfig` is the one object that names them all — the thing a
+launch script builds from flags, a benchmark sweeps, and a test tweaks
+with :func:`dataclasses.replace` — plus the drift/refresh knobs that
+version the programmed state (``refresh_every``, ``clock``).
+
+``ServeLoop(params, cfg, ServeConfig(...))`` is the supported surface;
+the legacy ``ServeLoop(params, cfg, policy=…, slots=…, …)`` keyword form
+still works for one release behind a :class:`ReproDeprecationWarning`
+(CI promotes repro's own deprecation warnings to errors, so in-tree
+callers are already migrated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core.layers import MemPolicy
+
+__all__ = ["ServeConfig", "ReproDeprecationWarning"]
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """Deprecation warning for repro's own APIs.
+
+    A dedicated subclass so the test suite can promote exactly repro's
+    deprecations to errors (``filterwarnings = error::repro...`` in
+    pyproject.toml) without tripping over dependencies' unrelated
+    DeprecationWarnings."""
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Every knob of one :class:`~repro.serve.batching.ServeLoop`.
+
+    Scheduling / memory:
+      slots: decode lanes in the slot table.
+      max_len: per-request prompt + generation budget (KV positions).
+      prefill_chunk: prompt tokens per prefill chunk (None = the whole
+        remaining prompt in one bucket-padded chunk).
+      block_size: KV tokens per paged-arena block.
+      kv_blocks: physical blocks in the pool (None = slots full lanes
+        + the trash block).
+      buckets: prompt pad buckets (None = powers of two up to max_len).
+      prefix_cache: refcounted cross-request prompt-prefix KV sharing.
+
+    Numerics / placement:
+      policy: the MemPolicy mapping layer names to DPE configs (None =
+        fully digital).
+      compute_dtype: activation dtype of the serving steps.
+      weight_stationary: program the model once at construction (the
+        MemIntelli inference semantics); False re-programs per call.
+      mesh: device mesh — programmed state materialises sharded over it.
+      allow_coupled_numerics: admit policies whose ADC range couples
+        batch rows (batched==solo then no longer holds).
+
+    Observability:
+      collect_logits: keep per-token logit rows on every result.
+      collect_trace: record per-iteration scheduler activity.
+
+    Drift / refresh (DESIGN.md §5 — the programmed-state generation
+    machinery):
+      refresh_every: device-clock seconds between background re-programs
+        (None = never re-program).  Each refresh builds generation N+1
+        (fresh programming noise, new ``t_prog`` stamp) while generation
+        N keeps serving; lanes swap at request boundaries only.
+      clock: zero-arg callable returning device-clock seconds — drives
+        drift aging and the refresh schedule.  None = wall time relative
+        to ``run()`` start.  Tests inject a deterministic fake clock
+        here; latency metrics always use the real wall clock regardless.
+    """
+
+    policy: MemPolicy | None = None
+    slots: int = 4
+    max_len: int = 256
+    prefill_chunk: int | None = None
+    block_size: int = 16
+    kv_blocks: int | None = None
+    buckets: tuple[int, ...] | None = None
+    compute_dtype: Any = jnp.bfloat16
+    weight_stationary: bool = True
+    mesh: Any = None
+    collect_logits: bool = False
+    collect_trace: bool = False
+    allow_coupled_numerics: bool = False
+    prefix_cache: bool = True
+    refresh_every: float | None = None
+    clock: Callable[[], float] | None = None
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.max_len < 1:
+            raise ValueError("max_len must be >= 1")
+        if self.refresh_every is not None and self.refresh_every <= 0:
+            raise ValueError("refresh_every must be > 0 seconds (or None)")
+        if self.buckets is not None:
+            object.__setattr__(self, "buckets", tuple(self.buckets))
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)

@@ -31,6 +31,7 @@ import contextlib
 import jax
 import jax.numpy as jnp
 
+from repro.core.drift import drift_clock
 from repro.core.layers import MemPolicy
 from repro.distributed.sharding import rules_context
 from repro.models import decode_step as model_decode
@@ -117,7 +118,11 @@ def make_prefill_step(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
 
-    def prefill_step(params, batch, programmed=None):
+    def prefill_step(params, batch, programmed=None, t_now=None):
+        with drift_clock(t_now):
+            return _prefill_step(params, batch, programmed)
+
+    def _prefill_step(params, batch, programmed):
         hidden, states = forward(
             params, cfg, batch, policy=policy, rng=rng, mode="prefill",
             compute_dtype=compute_dtype, remat=remat, programmed=programmed,
@@ -171,8 +176,13 @@ def make_slot_prefill(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)  # static programming noise for serving
 
-    def slot_prefill(params, tokens, prompt_len, programmed=None):
+    def slot_prefill(params, tokens, prompt_len, programmed=None,
+                     t_now=None):
         """tokens: (1, bucket) right-padded; prompt_len: () int32."""
+        with drift_clock(t_now):
+            return _slot_prefill(params, tokens, prompt_len, programmed)
+
+    def _slot_prefill(params, tokens, prompt_len, programmed):
         hidden, states = forward(
             params, cfg, {"tokens": tokens}, policy=policy, rng=rng,
             mode="prefill", compute_dtype=compute_dtype, remat=remat,
@@ -224,15 +234,20 @@ def make_chunk_prefill(
 
     def chunk_fn(
         params, cache, tokens, slot, start, n_valid, final,
-        programmed=None,
+        programmed=None, t_now=None,
     ):
         """tokens: (C,) right-padded chunk; slot/start/n_valid: () int32;
-        final: () bool — non-final chunks skip the vocab head."""
-        return prefill_chunk_step(
-            params, cfg, cache, tokens, slot, start, n_valid, final,
-            policy=policy, rng=rng, compute_dtype=compute_dtype,
-            programmed=programmed,
-        )
+        final: () bool — non-final chunks skip the vocab head.  ``t_now``
+        (traced f32 device-clock scalar, or None) is published to
+        ``dpe_apply`` via :func:`repro.core.drift.drift_clock` while the
+        body traces — the drift evaluation point for every analog matmul
+        of the chunk."""
+        with drift_clock(t_now):
+            return prefill_chunk_step(
+                params, cfg, cache, tokens, slot, start, n_valid, final,
+                policy=policy, rng=rng, compute_dtype=compute_dtype,
+                programmed=programmed,
+            )
 
     return chunk_fn
 
@@ -251,12 +266,14 @@ def make_decode_step(
     policy = policy or DIGITAL
     rng = jax.random.PRNGKey(0)
 
-    def decode_fn(params, cache, tokens, programmed=None, active=None):
-        return model_decode(
-            params, cfg, cache, tokens, policy=policy, rng=rng,
-            compute_dtype=compute_dtype, programmed=programmed,
-            active=active,
-        )
+    def decode_fn(params, cache, tokens, programmed=None, active=None,
+                  t_now=None):
+        with drift_clock(t_now):
+            return model_decode(
+                params, cfg, cache, tokens, policy=policy, rng=rng,
+                compute_dtype=compute_dtype, programmed=programmed,
+                active=active,
+            )
 
     return decode_fn
 
@@ -275,6 +292,7 @@ def greedy_generate(
     weight_stationary: bool = True,
     jit_steps: bool = True,
     mesh=None,
+    t_now=None,
 ):
     """Batched greedy decoding driver (example / integration tests).
 
@@ -288,7 +306,14 @@ def greedy_generate(
     materialised sharded over it (``programmed_sharding_rules``) instead
     of replicated — bitwise-identical logits, per-device bytes divided by
     the model-axis size for TP-sharded layers.
+
+    ``t_now`` (device-clock seconds, optional) is the drift evaluation
+    time threaded to every prefill/decode step — with a drift-enabled
+    policy the generation reads the programmed state as aged to
+    ``t_now``; None (default) disables drift evaluation entirely.
     """
+    if t_now is not None:
+        t_now = jnp.asarray(t_now, jnp.float32)
     b, s = prompt_tokens.shape
     ml = max_len or (s + n_steps + 1)
     batch = {"tokens": prompt_tokens}
@@ -315,12 +340,12 @@ def greedy_generate(
             # donate the cache: each token's KV update aliases the previous
             # buffer instead of allocating a fresh max_len-sized cache
             decode = jax.jit(decode, donate_argnums=(1,))
-        logits, cache = prefill(params, batch, programmed)
+        logits, cache = prefill(params, batch, programmed, t_now)
         out = []
         tok = jnp.argmax(logits, axis=-1)
         for _ in range(n_steps):
             out.append(tok)
-            logits, cache = decode(params, cache, tok, programmed)
+            logits, cache = decode(params, cache, tok, programmed, None, t_now)
             tok = jnp.argmax(logits, axis=-1)
         out.append(tok)
     return jnp.stack(out, axis=1)

@@ -47,6 +47,7 @@ from repro.core.layers import MemPolicy
 from repro.models import init_params, program_params
 from repro.serve import (
     Request,
+    ServeConfig,
     ServeLoop,
     greedy_generate,
     make_slot_prefill,
@@ -109,8 +110,10 @@ def test_batched_equals_solo_greedy(model, programmed, mode):
     prog = programmed[mode]
     prompts = _prompts(cfg)
     loop = ServeLoop(
-        params, cfg, policy=policy, slots=3, max_len=MAX_LEN,
-        compute_dtype=jnp.float32, programmed=prog,
+        params, cfg, ServeConfig(
+            policy=policy, slots=3, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=prog,
     )
     report = loop.run(_requests(prompts))
     for res, p, (_, m) in zip(report.results, prompts, WORKLOAD):
@@ -135,9 +138,10 @@ def test_fast_logits_bitwise_across_packings(model, programmed):
     runs = {}
     for slots in (1, 3):
         loop = ServeLoop(
-            params, cfg, policy=POLICIES["fast"], slots=slots,
-            max_len=MAX_LEN, compute_dtype=jnp.float32,
-            programmed=programmed["fast"], collect_logits=True,
+            params, cfg, ServeConfig(
+                policy=POLICIES["fast"], slots=slots, max_len=MAX_LEN,
+                compute_dtype=jnp.float32, collect_logits=True,
+            ), programmed=programmed["fast"],
         )
         runs[slots] = loop.run(_requests(prompts)).results
     for a, b in zip(runs[1], runs[3]):
@@ -165,9 +169,10 @@ def test_refill_does_not_perturb_neighbors(model, programmed):
             # C enters B's freed slot while A is mid-flight
             reqs.append(Request(rid=2, tokens=c, max_new_tokens=5))
         loop = ServeLoop(
-            params, cfg, policy=POLICIES["fast"], slots=2,
-            max_len=MAX_LEN, compute_dtype=jnp.float32,
-            programmed=programmed["fast"], collect_logits=True,
+            params, cfg, ServeConfig(
+                policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
+                compute_dtype=jnp.float32, collect_logits=True,
+            ), programmed=programmed["fast"],
         )
         return loop.run(reqs).results
 
@@ -188,8 +193,10 @@ def test_eos_and_max_tokens_never_leak(model, programmed):
     cfg, params = model
     prompts = _prompts(cfg)
     loop = ServeLoop(
-        params, cfg, policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
-        compute_dtype=jnp.float32, programmed=programmed["fast"],
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=programmed["fast"],
     )
     free_run = loop.run(
         [Request(rid=i, tokens=p, max_new_tokens=8)
@@ -238,10 +245,11 @@ def test_chunked_prefill_bitwise_across_chunk_sizes(model, programmed):
     runs = {}
     for chunk in (None, 3, 4, 8):
         loop = ServeLoop(
-            params, cfg, policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
-            prefill_chunk=chunk, block_size=8,
-            compute_dtype=jnp.float32, programmed=programmed["fast"],
-            collect_logits=True,
+            params, cfg, ServeConfig(
+                policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
+                prefill_chunk=chunk, block_size=8,
+                compute_dtype=jnp.float32, collect_logits=True,
+            ), programmed=programmed["fast"],
         )
         runs[chunk] = loop.run(reqs()).results
     for chunk in (3, 4, 8):
@@ -264,8 +272,10 @@ def test_chunked_prefill_bitwise_across_chunk_sizes(model, programmed):
         cache_dtype=jnp.float32,
     ))
     buckets = ServeLoop(
-        params, cfg, policy=POLICIES["fast"], slots=1, max_len=MAX_LEN,
-        compute_dtype=jnp.float32, programmed=programmed["fast"],
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=1, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=programmed["fast"],
     ).buckets
     for res, p in zip(runs[4], prompts):
         s = len(p)
@@ -288,9 +298,11 @@ def test_long_prompt_admission_never_starves_decode(model, programmed):
     short = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
     long_p = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
     loop = ServeLoop(
-        params, cfg, policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
-        prefill_chunk=4, block_size=8, compute_dtype=jnp.float32,
-        programmed=programmed["fast"], collect_trace=True,
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
+            prefill_chunk=4, block_size=8, compute_dtype=jnp.float32,
+            collect_trace=True,
+        ), programmed=programmed["fast"],
     )
     rep = loop.run([
         Request(rid=0, tokens=short, max_new_tokens=20),  # active lane
@@ -328,9 +340,11 @@ def test_paged_pool_reuses_freed_blocks_without_leakage(model, programmed):
         for l, _ in workload
     ]
     loop = ServeLoop(
-        params, cfg, policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
-        prefill_chunk=8, block_size=8, kv_blocks=7,  # 6 usable: 2 lanes
-        compute_dtype=jnp.float32, programmed=programmed["fast"],
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
+            prefill_chunk=8, block_size=8, kv_blocks=7,  # 6 usable: 2 lanes
+            compute_dtype=jnp.float32,
+        ), programmed=programmed["fast"],
     )
     rep = loop.run(_requests(prompts, workload))
     assert rep.kv_blocks_reused > 0, "pool pressure should force reuse"
@@ -354,23 +368,26 @@ def test_rejects_unsupported_and_coupled(model):
     cfg, params = model
     with pytest.raises(ValueError, match="dynamic_row"):
         ServeLoop(
-            params, cfg, slots=2, max_len=MAX_LEN,
-            policy=MemPolicy(
-                default=DPEConfig(
-                    input_spec=INT8, weight_spec=INT8, mode="faithful"
-                )
+            params, cfg, ServeConfig(
+                slots=2, max_len=MAX_LEN,
+                policy=MemPolicy(
+                    default=DPEConfig(
+                        input_spec=INT8, weight_spec=INT8, mode="faithful"
+                    )
+                ),
+                weight_stationary=False,
             ),
-            weight_stationary=False,
         )
     ssm_cfg = get_smoke("rwkv6-1.6b")
     with pytest.raises(NotImplementedError):
         ServeLoop(
             init_params(ssm_cfg, jax.random.PRNGKey(0)), ssm_cfg,
-            slots=2, max_len=MAX_LEN,
+            ServeConfig(slots=2, max_len=MAX_LEN),
         )
     # request validation: arena overflow is refused, not clamped
     loop = ServeLoop(
-        params, cfg, slots=1, max_len=16, compute_dtype=jnp.float32,
+        params, cfg,
+        ServeConfig(slots=1, max_len=16, compute_dtype=jnp.float32),
     )
     with pytest.raises(ValueError, match="exceeds max_len"):
         loop.run(
@@ -380,8 +397,10 @@ def test_rejects_unsupported_and_coupled(model):
     # a request whose KV need exceeds the whole block pool can never be
     # admitted — refused up front, not deadlocked
     tiny = ServeLoop(
-        params, cfg, slots=1, max_len=32, block_size=8, kv_blocks=3,
-        compute_dtype=jnp.float32,
+        params, cfg, ServeConfig(
+            slots=1, max_len=32, block_size=8, kv_blocks=3,
+            compute_dtype=jnp.float32,
+        ),
     )
     with pytest.raises(ValueError, match="KV[ ]?blocks|blocks but the pool"):
         tiny.run(
@@ -408,7 +427,7 @@ _SHARD_SCRIPT = textwrap.dedent(
     from repro.core import DPEConfig, spec
     from repro.core.layers import MemPolicy
     from repro.models import init_params
-    from repro.serve import Request, ServeLoop, greedy_generate
+    from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
 
     INT8 = spec("int8")
     cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
@@ -432,8 +451,9 @@ _SHARD_SCRIPT = textwrap.dedent(
     ):
         pol = MemPolicy(default=mode_cfg)
         # ONE programmed pytree, materialised SHARDED over the 2x4 mesh
-        loop = ServeLoop(params, cfg, policy=pol, slots=3, max_len=32,
-                         compute_dtype=jnp.float32, mesh=mesh)
+        loop = ServeLoop(params, cfg, ServeConfig(
+            policy=pol, slots=3, max_len=32,
+            compute_dtype=jnp.float32, mesh=mesh))
         rep_sh = loop.run(reqs(workload))
         # solo reference under the SAME mesh + programmed state (the
         # honest comparison: re-partitioned compilations can shift a

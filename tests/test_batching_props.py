@@ -36,7 +36,7 @@ from repro.configs import get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.models import init_params, program_params
-from repro.serve import PrefixCache, Request, ServeLoop
+from repro.serve import PrefixCache, Request, ServeConfig, ServeLoop
 
 INT8 = spec("int8")
 FAST = MemPolicy(
@@ -74,8 +74,10 @@ def _workload(seed, n_requests):
 def _run(workload, slots, order, eos=None):
     cfg, params, prog = _model()
     loop = ServeLoop(
-        params, cfg, policy=FAST, slots=slots, max_len=MAX_LEN,
-        compute_dtype=jnp.float32, programmed=prog,
+        params, cfg, ServeConfig(
+            policy=FAST, slots=slots, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=prog,
     )
     reqs = [
         Request(rid=i, tokens=workload[i][0],

@@ -1,0 +1,356 @@
+"""Conductance drift + zero-downtime re-programming (DESIGN.md §5) and
+the unified ServeConfig construction surface (DESIGN.md §7).
+
+Contract under test:
+
+* **Drift off is bitwise off.**  ``DPEConfig(drift=None)`` (the default)
+  traces the identical graph whether or not a drift clock is set:
+  enabling the machinery without a model changes not a single bit.
+* **Zero elapsed time is the identity.**  ``DriftModel.factor(0) == 1``
+  exactly, so a freshly programmed array is bit-identical to the
+  drift-free one even with the model attached.
+* **Drift decays, re-programming restores.**  Relative error vs the fp
+  matmul grows monotonically with device time, and a re-program (fresh
+  ``t_prog`` stamp) returns it to the fresh-array level.
+* **No mid-request swap.**  A background refresh mid-stream never
+  touches an in-flight request: its tokens are bitwise identical to a
+  refresh-disabled run, while a request admitted after the swap decodes
+  on generation N+1 exactly (== solo greedy on the generation-1 pytree,
+  key ``fold_in(PRNGKey(0), 1)``).
+* **ServeConfig == legacy kwargs, one warning.**  The deprecated loose
+  keyword construction produces the same report as the ServeConfig path
+  and warns exactly once (``ReproDeprecationWarning`` — promoted to an
+  error for in-tree callers via pyproject filterwarnings).
+* **Stable counter surface.**  ``ServeReport.counters()`` returns the
+  documented counter mapping, including ``reprogram_swaps``.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (
+    DPEConfig,
+    DriftModel,
+    drift_clock,
+    dpe_apply,
+    program_weight,
+    relative_error,
+    spec,
+)
+from repro.core.layers import MemPolicy
+from repro.models import init_params, program_params
+from repro.serve import (
+    ReproDeprecationWarning,
+    Request,
+    ServeConfig,
+    ServeLoop,
+    ServeReport,
+    greedy_generate,
+)
+
+INT8 = spec("int8")
+FAST = MemPolicy(
+    default=DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
+)
+DRIFTED = MemPolicy(
+    default=DPEConfig(
+        input_spec=INT8, weight_spec=INT8, mode="fast",
+        drift=DriftModel(kind="power", nu=0.3, t0=1.0),
+    )
+)
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prog(model):
+    # PRNGKey(0) matches the loop's own generation-0 self-programming
+    cfg, params = model
+    return program_params(params, cfg, FAST, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, workload, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l, _ in workload
+    ]
+
+
+# -- DriftModel unit contract ------------------------------------------------
+
+
+def test_drift_model_validation_and_identity():
+    with pytest.raises(ValueError):
+        DriftModel(kind="banana")
+    with pytest.raises(ValueError):
+        DriftModel(nu=-0.1)
+    m = DriftModel(kind="power", nu=0.1, t0=2.0)
+    assert float(m.factor(0.0)) == 1.0  # exact: (1+0)**-nu
+    assert float(m.factor(-5.0)) == 1.0  # clocks never run backwards
+    f1, f2 = float(m.factor(10.0)), float(m.factor(100.0))
+    assert 0.0 < f2 < f1 < 1.0
+    e = DriftModel(kind="exp", tau=3.0)
+    assert float(e.factor(0.0)) == 1.0
+    assert float(e.factor(3.0)) == pytest.approx(np.exp(-1.0))
+
+
+@pytest.mark.parametrize("mode", ["fast", "faithful"])
+def test_drift_off_is_bitwise_off(mode):
+    """drift=None: setting a clock (or passing t_now) must not change a
+    bit — the drift-free graph is the pre-drift graph."""
+    cfg = DPEConfig(
+        input_spec=INT8, weight_spec=INT8, array_size=(32, 32), mode=mode,
+        adc_mode="dynamic_row",
+    )
+    rng = jax.random.PRNGKey(7)
+    w = jax.random.normal(rng, (48, 40))
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (4, 48))
+    pw = program_weight(w, cfg, key=jax.random.fold_in(rng, 2), t_prog=0.0)
+    base = dpe_apply(x, pw, 40, cfg)
+    with drift_clock(jnp.float32(1e4)):
+        clocked = dpe_apply(x, pw, 40, cfg)
+    explicit = dpe_apply(x, pw, 40, cfg, t_now=jnp.float32(1e4))
+    assert np.array_equal(np.asarray(base), np.asarray(clocked))
+    assert np.array_equal(np.asarray(base), np.asarray(explicit))
+
+
+def test_drift_decays_and_reprogram_restores():
+    """The §5 story in one array: error grows with device time; building
+    generation N+1 (fresh t_prog) restores the fresh-array error."""
+    cfg = DPEConfig(
+        input_spec=INT8, weight_spec=INT8, mode="fast",
+        drift=DriftModel(kind="power", nu=0.3, t0=1.0),
+    )
+    rng = jax.random.PRNGKey(11)
+    w = jax.random.normal(rng, (48, 40))
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (4, 48))
+    ideal = x @ w
+    pw = program_weight(w, cfg, key=jax.random.fold_in(rng, 2), t_prog=0.0)
+
+    def err(prog, t_now):
+        out = dpe_apply(x, prog, 40, cfg, t_now=jnp.float32(t_now))
+        return float(relative_error(out, ideal))
+
+    e_fresh = err(pw, 0.0)
+    errs = [err(pw, t) for t in (1.0, 10.0, 100.0)]
+    assert errs == sorted(errs), "drift error must grow with time"
+    assert errs[-1] > 3 * e_fresh, "drift at t=100 should dominate"
+    # generation N+1: same key is fine here — the restoring agent is the
+    # fresh t_prog stamp, not fresh noise
+    pw2 = program_weight(
+        w, cfg, key=jax.random.fold_in(rng, 2), t_prog=100.0
+    )
+    assert err(pw2, 100.0) == pytest.approx(e_fresh, rel=1e-6)
+
+    # t_prog stamped but NO clock at apply time -> no drift either
+    assert err(pw, 0.0) == pytest.approx(
+        float(relative_error(dpe_apply(x, pw, 40, cfg), ideal)), rel=1e-6
+    )
+
+
+# -- ServeConfig surface -----------------------------------------------------
+
+
+def test_serveconfig_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(slots=0)
+    with pytest.raises(ValueError):
+        ServeConfig(max_len=0)
+    with pytest.raises(ValueError):
+        ServeConfig(refresh_every=0.0)
+    c = ServeConfig(buckets=[8, 16])
+    assert c.buckets == (8, 16)
+    assert c.replace(slots=7).slots == 7
+
+
+def test_legacy_kwargs_equal_config_and_warn_once(model, prog):
+    cfg, params = model
+    workload = [(4, 5), (7, 3), (3, 4)]
+    prompts = _prompts(cfg, workload)
+    reqs = lambda: [
+        Request(rid=i, tokens=p, max_new_tokens=m)
+        for i, (p, (_, m)) in enumerate(zip(prompts, workload))
+    ]
+    config = ServeConfig(
+        policy=FAST, slots=2, max_len=MAX_LEN, compute_dtype=jnp.float32,
+    )
+    new = ServeLoop(params, cfg, config, programmed=prog).run(reqs())
+    with pytest.warns(ReproDeprecationWarning) as rec:
+        legacy_loop = ServeLoop(
+            params, cfg, policy=FAST, slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32, programmed=prog,
+        )
+    assert len(rec) == 1, "legacy construction must warn exactly once"
+    assert legacy_loop.config == config
+    old = legacy_loop.run(reqs())
+    for a, b in zip(new.results, old.results):
+        assert a.tokens == b.tokens
+        assert a.finish_reason == b.finish_reason
+    assert new.counters() == old.counters()
+
+    with pytest.raises(TypeError, match="not both"):
+        ServeLoop(params, cfg, config, slots=2)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServeLoop(params, cfg, slotz=2)
+
+
+def test_report_counters_mapping(model, prog):
+    cfg, params = model
+    loop = ServeLoop(
+        params, cfg,
+        ServeConfig(policy=FAST, slots=2, max_len=MAX_LEN,
+                    compute_dtype=jnp.float32),
+        programmed=prog,
+    )
+    rep = loop.run(
+        [Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                 max_new_tokens=3)]
+    )
+    counters = rep.counters()
+    assert set(counters) == set(ServeReport.COUNTER_FIELDS)
+    assert all(isinstance(v, int) for v in counters.values())
+    assert counters["generated_tokens"] == 3
+    assert counters["reprogram_swaps"] == 0
+
+
+def test_refresh_requires_programmed_state(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="refresh_every"):
+        ServeLoop(
+            params, cfg,
+            ServeConfig(slots=1, max_len=MAX_LEN, refresh_every=1.0,
+                        compute_dtype=jnp.float32),
+        )
+
+
+# -- the §5 swap-boundary contract -------------------------------------------
+
+
+def _swap_workload(cfg):
+    # A: long-running, admitted at generation 0, decodes across the swap
+    # B: short, frees its slot before/around the swap
+    # C: admitted into B's freed slot AFTER the swap -> generation 1
+    workload = [(5, 10), (6, 3), (4, 5)]
+    return _prompts(cfg, workload, seed=3), workload
+
+
+def _run_serve(params, cfg, prog, reqs, *, policy=FAST, refresh=None):
+    # device clock: one tick at run() start (t=1, arms the refresh),
+    # then one per scheduler iteration (t_dev = 2, 3, ...).  With
+    # refresh_every=2.0 the swap fires at iteration 1 (t_dev=3) — after
+    # A and B are admitted on generation 0, while A is mid-decode, and
+    # before B's freed slot re-admits C
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=policy, slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32, collect_logits=True,
+            refresh_every=refresh,
+            clock=lambda c=itertools.count(1): float(next(c)),
+        ), programmed=prog,
+    )
+    report = loop.run(reqs())
+    return loop, report
+
+
+def test_no_mid_request_swap(model, prog):
+    """Background re-program mid-stream: in-flight requests finish on
+    the generation they started with (bitwise — tokens AND logits),
+    while the post-swap admission decodes exactly generation 1 (== solo
+    greedy on the fold_in(key0, 1) pytree)."""
+    cfg, params = model
+    prompts, workload = _swap_workload(cfg)
+    reqs = lambda: [
+        Request(rid=i, tokens=p, max_new_tokens=m)
+        for i, (p, (_, m)) in enumerate(zip(prompts, workload))
+    ]
+
+    loop, with_swap = _run_serve(params, cfg, prog, reqs, refresh=2.0)
+    _, no_swap = _run_serve(params, cfg, prog, reqs, refresh=None)
+
+    assert with_swap.reprogram_swaps >= 1
+    assert loop.generation >= 1
+    assert no_swap.reprogram_swaps == 0
+    # C really decoded concurrently with A (the swap happened mid-stream,
+    # not between runs)
+    assert with_swap.results[2].decode_steps > 0
+    assert with_swap.results[0].decode_steps >= 5
+
+    # in-flight invariance: A and B, admitted pre-swap, are bitwise
+    # untouched by the background re-program
+    for i in (0, 1):
+        a, b = with_swap.results[i], no_swap.results[i]
+        assert a.tokens == b.tokens, f"in-flight rid {i} perturbed"
+        assert len(a.logits) == len(b.logits)
+        for x, y in zip(a.logits, b.logits):
+            assert np.array_equal(x, y), f"in-flight rid {i} logits"
+
+    # the post-swap admission runs generation 1: fresh programming noise
+    # from fold_in(PRNGKey(0), 1) — bitwise equal to solo greedy on that
+    # explicitly rebuilt pytree (drift off, so t_prog is inert)
+    prog1 = program_params(
+        params, cfg, FAST, jax.random.fold_in(jax.random.PRNGKey(0), 1)
+    )
+    ref1 = greedy_generate(
+        params, cfg, jnp.asarray(prompts[2])[None], workload[2][1] - 1,
+        policy=FAST, compute_dtype=jnp.float32, programmed=prog1,
+        max_len=MAX_LEN,
+    )
+    assert with_swap.results[2].tokens == list(np.asarray(ref1[0]))
+    # and the swap is observable: generation 1 is a different device
+    # state than generation 0 (same prompt, different programming noise)
+    ref0 = greedy_generate(
+        params, cfg, jnp.asarray(prompts[2])[None], workload[2][1] - 1,
+        policy=FAST, compute_dtype=jnp.float32, programmed=prog,
+        max_len=MAX_LEN,
+    )
+    leaves0, leaves1 = jax.tree.leaves(prog), jax.tree.leaves(prog1)
+    assert any(
+        a.shape == b.shape and bool((np.asarray(a) != np.asarray(b)).any())
+        for a, b in zip(leaves0, leaves1)
+    ), "generation 1 must carry fresh programming noise"
+    del ref0  # noise may or may not flip these tiny-vocab tokens
+
+
+def test_drifted_serve_refreshes_under_live_traffic(model):
+    """End-to-end with a drift model attached: the loop serves, swaps at
+    least once, and in-flight requests stay bitwise invariant to the
+    background refresh (same device-clock sequence on both runs)."""
+    cfg, params = model
+    prog_d = program_params(
+        params, cfg, DRIFTED, jax.random.PRNGKey(0), t_prog=0.0
+    )
+    prompts, workload = _swap_workload(cfg)
+    reqs = lambda: [
+        Request(rid=i, tokens=p, max_new_tokens=m)
+        for i, (p, (_, m)) in enumerate(zip(prompts, workload))
+    ]
+    loop, with_swap = _run_serve(
+        params, cfg, prog_d, reqs, policy=DRIFTED, refresh=2.0
+    )
+    _, no_swap = _run_serve(
+        params, cfg, prog_d, reqs, policy=DRIFTED, refresh=None
+    )
+    assert with_swap.reprogram_swaps >= 1
+    assert with_swap.counters()["reprogram_swaps"] >= 1
+    for res, (_, m) in zip(with_swap.results, workload):
+        assert len(res.tokens) == m
+        assert res.finish_reason == "length"
+    # in-flight requests (admitted on generation 0) see the same aged
+    # generation-0 state in both runs -> bitwise identical
+    for i in (0, 1):
+        assert with_swap.results[i].tokens == no_swap.results[i].tokens
+        for x, y in zip(
+            with_swap.results[i].logits, no_swap.results[i].logits
+        ):
+            assert np.array_equal(x, y)

@@ -39,7 +39,7 @@ from repro.models.attention import (
     attention_decode,
     attention_dense,
 )
-from repro.serve import Request, ServeLoop, greedy_generate
+from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
 
 BS, NB, N_BLOCKS = 4, 8, 24  # S = 32 logical positions per slot
 KV, HD, H = 2, 16, 8
@@ -232,8 +232,10 @@ def _serve_case(mode):
     ]
     assert kops.resolve_attention_backend() == "pallas"
     loop = ServeLoop(
-        params, cfg, policy=policy, slots=2, max_len=MAX_LEN,
-        compute_dtype=jnp.float32, programmed=prog,
+        params, cfg, ServeConfig(
+            policy=policy, slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=prog,
     )
     report = loop.run(reqs)
     for res, p, (_, m) in zip(report.results, prompts, WORKLOAD):

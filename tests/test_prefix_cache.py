@@ -34,7 +34,7 @@ from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.kernels import ops as kops
 from repro.models import init_params, program_params
-from repro.serve import Request, ServeLoop, greedy_generate
+from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
 
 INT8 = spec("int8")
 POLICIES = {
@@ -73,8 +73,10 @@ def _loop(model, programmed, mode="fast", **kw):
     kw.setdefault("max_len", MAX_LEN)
     kw.setdefault("block_size", 8)
     return ServeLoop(
-        params, cfg, policy=POLICIES[mode], compute_dtype=jnp.float32,
-        programmed=programmed[mode], collect_logits=True, **kw
+        params, cfg, ServeConfig(
+            policy=POLICIES[mode], compute_dtype=jnp.float32,
+            collect_logits=True, **kw,
+        ), programmed=programmed[mode],
     )
 
 
