@@ -75,6 +75,19 @@ CHECKS = (
     # reported but not gated)
     ("serve_prefix_cache ttft",
      "serve_prefix_cache.ttft_p50_cold_over_cached"),
+    # priority-class admission (DESIGN.md §7): interactive p95 TTFT
+    # under a batch flood, FIFO (max_queue_skip=0) over the class-aware
+    # scheduler — a drop means interactive traffic re-acquired
+    # head-of-line blocking behind the flood (serve/batching.py) — plus
+    # two deterministic indicators: tokens identical across admission
+    # orders (1.0 = scheduling never touched numerics) and the
+    # trace-asserted no-starvation aging bound (1.0 = holds)
+    ("serve_priority ttft",
+     "serve_priority.ttft_p95_interactive_fifo_over_scheduled"),
+    ("serve_priority tokens identical",
+     "serve_priority.tokens_identical_fifo_vs_scheduled"),
+    ("serve_priority aging bound",
+     "serve_priority.aging_bound_holds"),
     # drift + zero-downtime re-programming (DESIGN.md §5): background
     # refresh must keep removing the drift-accumulated logit error from
     # the oldest traffic (deterministic — fake device clock, greedy,

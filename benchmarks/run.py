@@ -825,6 +825,163 @@ def bench_serve_prefix_cache(
     return section
 
 
+def bench_serve_priority(
+    quick=False, arch="qwen2-0.5b", policy_name="mem_fast"
+):
+    """Priority-class admission win (serve/batching.py, DESIGN.md §7):
+    a batch flood submitted at t=0 plus Poisson interactive arrivals,
+    served FIFO (``max_queue_skip=0`` — the pre-scheduler admission)
+    vs with the class-aware scheduler.  Under FIFO every interactive
+    request queues behind the whole flood, so its TTFT is the flood's
+    drain time; the scheduler admits interactive requests into the next
+    free lane (weighted round-robin, aging-bounded), collapsing
+    interactive TTFT while batch throughput stays within the aging
+    bound.
+
+    Three gated quantities: the wall-clock p95 interactive-TTFT ratio
+    FIFO/scheduled (the win; >1), plus two deterministic indicators —
+    ``tokens_identical_fifo_vs_scheduled`` (1.0 = every request decodes
+    to the same tokens under both admission orders: scheduling reorders
+    admissions, never numerics) and ``aging_bound_holds`` (1.0 = the
+    recorded scheduler trace shows no request overtaken by more than
+    ``max_queue_skip`` later-submitted requests — no starvation).
+    Returns the ``serve_priority`` section of ``BENCH_dpe.json``."""
+    from repro.configs import get_smoke
+    from repro.launch.dryrun import make_policy
+    from repro.models import init_params, program_params
+    from repro.serve import Request, ServeConfig, ServeLoop
+    from repro.serve.batching import _percentiles
+
+    cfg = get_smoke(arch)
+    policy = make_policy(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prog = program_params(params, cfg, policy, jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(prog))
+
+    slots, bs, chunk = 2, 16, 16
+    flood_len, flood_new = 24, 8
+    int_len, int_new = 8, 4
+    n_flood = 6 if quick else 12
+    n_int = 4 if quick else 8
+    weight, max_skip = 4, 8
+    rate = 20.0
+    max_len = flood_len + flood_new + 1
+    rng = np.random.default_rng(0)
+    flood_prompts = [
+        rng.integers(0, cfg.vocab, size=flood_len).astype(np.int32)
+        for _ in range(n_flood)
+    ]
+    int_prompts = [
+        rng.integers(0, cfg.vocab, size=int_len).astype(np.int32)
+        for _ in range(n_int)
+    ]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_int))
+
+    def requests(new_cap=None):
+        # flood first in the submission list: with equal submit times
+        # the queue's (t, seq) order puts every flood request ahead of
+        # any same-instant interactive one — worst case for FIFO
+        return [
+            Request(
+                rid=i, tokens=p, max_new_tokens=new_cap or flood_new,
+                submit_time=0.0, priority="batch",
+            )
+            for i, p in enumerate(flood_prompts)
+        ] + [
+            Request(
+                rid=n_flood + i, tokens=p,
+                max_new_tokens=new_cap or int_new,
+                submit_time=float(arrivals[i]), priority="interactive",
+            )
+            for i, p in enumerate(int_prompts)
+        ]
+
+    def make_loop(skip):
+        return ServeLoop(
+            params, cfg, ServeConfig(
+                policy=policy, slots=slots, max_len=max_len,
+                prefill_chunk=chunk, block_size=bs,
+                compute_dtype=jnp.float32, collect_trace=True,
+                interactive_weight=weight, max_queue_skip=skip,
+            ), programmed=prog,
+        )
+
+    out, toks, aging_ok = {}, {}, 1.0
+    for label, skip in (("fifo", 0), ("scheduled", max_skip)):
+        loop = make_loop(skip)
+        loop.run(requests(new_cap=2))  # warmup: compiles both buckets
+        rep = loop.run(requests())
+        t_int = _percentiles(
+            [r.ttft_s for r in rep.completed("interactive")]
+        )
+        t_bat = _percentiles([r.ttft_s for r in rep.completed("batch")])
+        toks[label] = {r.rid: r.tokens for r in rep.results}
+        # no-starvation invariant, from the trace: nobody is overtaken
+        # by more than max_queue_skip later-submitted requests
+        admitted = [rid for t in rep.trace for rid in t["admitted"]]
+        sub_pos = {r.rid: i for i, r in enumerate(requests())}
+        for pos, rid in enumerate(admitted):
+            overtaken = sum(
+                1 for o in admitted[:pos] if sub_pos[o] > sub_pos[rid]
+            )
+            if overtaken > max(skip, 0):
+                aging_ok = 0.0
+        out[label] = {
+            "ttft_p50_interactive_s": round(t_int["p50"], 4),
+            "ttft_p95_interactive_s": round(t_int["p95"], 4),
+            "ttft_p95_batch_s": round(t_bat["p95"], 4),
+            "scheduler_skips": rep.scheduler_skips,
+            "aged_admissions": rep.aged_admissions,
+            "admission_deferrals": rep.admission_deferrals,
+            "tok_per_s": round(rep.tok_per_s, 1),
+        }
+        _row(
+            f"serve_priority_{label}", 0.0,
+            f"int_ttft_p95={t_int['p95']*1e3:.1f}ms "
+            f"batch_ttft_p95={t_bat['p95']*1e3:.1f}ms "
+            f"skips={rep.scheduler_skips}",
+        )
+
+    identical = float(toks["fifo"] == toks["scheduled"])
+    ratio_p95 = round(
+        out["fifo"]["ttft_p95_interactive_s"]
+        / max(out["scheduled"]["ttft_p95_interactive_s"], 1e-9), 2,
+    )
+    ratio_p50 = round(
+        out["fifo"]["ttft_p50_interactive_s"]
+        / max(out["scheduled"]["ttft_p50_interactive_s"], 1e-9), 2,
+    )
+    section = {
+        "arch": f"{arch} (smoke)",
+        "policy": policy_name,
+        "slots": slots,
+        "workload": {
+            "batch_flood": n_flood,
+            "flood_len": flood_len,
+            "flood_max_new": flood_new,
+            "interactive": n_int,
+            "interactive_len": int_len,
+            "interactive_max_new": int_new,
+            "arrival": f"flood at t=0; interactive poisson "
+                       f"rate={rate}/s",
+        },
+        "interactive_weight": weight,
+        "max_queue_skip": max_skip,
+        "fifo": out["fifo"],
+        "scheduled": out["scheduled"],
+        "ttft_p95_interactive_fifo_over_scheduled": ratio_p95,
+        "ttft_p50_interactive_fifo_over_scheduled": ratio_p50,
+        "tokens_identical_fifo_vs_scheduled": identical,
+        "aging_bound_holds": aging_ok,
+    }
+    _row(
+        "serve_priority_improvement", 0.0,
+        f"{ratio_p95}x p95 interactive TTFT, tokens_identical="
+        f"{identical:.0f}, aging_bound={aging_ok:.0f}",
+    )
+    return section
+
+
 def bench_serve_drift_refresh(
     quick=False, arch="qwen2-0.5b", policy_name="mem_fast"
 ):
@@ -1302,6 +1459,7 @@ JSON_SECTIONS = {
     "serve_batching": bench_serve_batching,
     "serve_chunked": bench_serve_chunked,
     "serve_prefix_cache": bench_serve_prefix_cache,
+    "serve_priority": bench_serve_priority,
     "serve_drift_refresh": bench_serve_drift_refresh,
     "dpe_kernel": bench_dpe_kernel,
     "paged_attention": bench_paged_attention,

@@ -24,6 +24,16 @@ inter-token latency (decode-phase smoothness):
         --smoke --policy mem_fast --requests 8 --slots 4 \
         --arrival poisson --rate 20 --prefill_chunk 16
 
+``--priority_mix F`` tags a fraction F of the requests as
+``priority="interactive"``; the class-aware admission scheduler
+(``--interactive_weight``, ``--max_queue_skip``, DESIGN.md §7) then
+protects their TTFT from the batch traffic and the report breaks
+TTFT/ITL out per class:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --smoke --policy mem_fast --requests 16 --slots 2 \
+        --priority_mix 0.5 --arrival poisson --rate 50
+
 Numerics contract (DESIGN.md §7): every request's tokens are identical
 to solo ``greedy_generate`` on that prompt; none of the knobs here
 (slots, chunk size, block size, arrival order) change a logit bit on
@@ -91,6 +101,20 @@ def main(argv=None):
     ap.add_argument("--kv_blocks", type=int, default=None,
                     help="total paged-arena blocks (default: slots x "
                          "ceil(max_len/block_size) + trash block)")
+    ap.add_argument("--priority_mix", type=float, default=0.0,
+                    help="fraction of requests tagged priority="
+                         "'interactive' (rest are 'batch'); the "
+                         "class-aware scheduler protects interactive "
+                         "TTFT from batch floods (DESIGN.md §7)")
+    ap.add_argument("--interactive_weight", type=int, default=4,
+                    help="weighted round-robin share of the interactive "
+                         "class: consecutive interactive admissions "
+                         "before one batch request goes first under "
+                         "contention")
+    ap.add_argument("--max_queue_skip", type=int, default=8,
+                    help="aging bound: max later-submitted requests ever "
+                         "admitted ahead of a waiting one (0 = strict "
+                         "submit-order FIFO, the pre-scheduler behaviour)")
     ap.add_argument("--prefix_cache", nargs="?", const="on", default="on",
                     choices=("on", "off"),
                     help="refcounted prefix block cache (DESIGN.md §7): "
@@ -278,8 +302,17 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
             compute_dtype=jnp.float32,
             weight_stationary=not args.per_call, mesh=mesh,
             prefix_cache=args.prefix_cache == "on",
+            interactive_weight=args.interactive_weight,
+            max_queue_skip=args.max_queue_skip,
             refresh_every=args.refresh_every,
         ), programmed=programmed,
+    )
+    # priority assignment: the first ceil(mix*N) requests of a random
+    # permutation are interactive — deterministic under the driver seed
+    interactive = set(
+        rng.permutation(args.requests)[
+            : int(np.ceil(args.priority_mix * args.requests))
+        ].tolist()
     )
     reqs = [
         Request(
@@ -292,6 +325,7 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
             ]),
             max_new_tokens=args.gen,
             submit_time=float(arrivals[i]),
+            priority="interactive" if i in interactive else "batch",
         )
         for i in range(args.requests)
     ]
@@ -321,6 +355,23 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
         f"mean={ttft['mean']:.3f} p50={ttft['p50']:.3f} "
         f"p95={ttft['p95']:.3f} max={ttft['max']:.3f}"
     )
+    if interactive:
+        for cls in ("interactive", "batch"):
+            t = report.ttft_percentiles(cls)
+            i = report.itl_percentiles(cls)
+            if not t:
+                continue
+            itl_part = f" itl_p50={i['p50']:.4f}" if i else ""
+            print(
+                f"  {cls:>11}: {len(report.completed(cls))} reqs, "
+                f"ttft p50={t['p50']:.3f} p95={t['p95']:.3f}" + itl_part
+            )
+        print(
+            f"scheduler: {report.scheduler_skips} skips, "
+            f"{report.aged_admissions} aged admissions "
+            f"(weight {args.interactive_weight}, "
+            f"skip bound {args.max_queue_skip})"
+        )
     itl = report.itl_percentiles()
     if itl:
         print(

@@ -5,8 +5,15 @@ programmed once and reused for many analog matmuls.  ``greedy_generate``
 amortises the programmed state over ONE fixed batch decoded in lockstep;
 this module amortises it over a *stream* of requests (DESIGN.md §7):
 
-* :class:`RequestQueue` holds submitted :class:`Request`\\ s (FIFO among
-  the ones whose arrival time has passed).
+* :class:`RequestQueue` holds submitted :class:`Request`\\ s and is the
+  admission **scheduler**: requests carry a priority class
+  (``"interactive"`` | ``"batch"``), each class is an arrival-ordered
+  queue, and selection is weighted toward interactive traffic
+  (``ServeConfig.interactive_weight``) with bounded skip-ahead past
+  pool-starved heads and a cache-aware tie-break — all under a global
+  aging bound (``ServeConfig.max_queue_skip``) that caps how many
+  later-submitted requests may ever be admitted ahead of a waiting one
+  (``max_queue_skip=0`` degenerates to strict submit-order FIFO).
 * :class:`ServeLoop` owns a fixed table of ``slots`` decode lanes backed
   by a PAGED KV arena — one block pool per attention layer
   (``kv_blocks x block_size`` token rows, donated across steps) indexed
@@ -25,11 +32,13 @@ this module amortises it over a *stream* of requests (DESIGN.md §7):
   sequences (EOS / max-token), releasing their block references, and
   refilling from the queue next iteration.
 
-Equivalence contract (tests/test_batching.py, DESIGN.md §7): a request
-decoded through this engine emits exactly the tokens ``greedy_generate``
-emits for it alone, because every per-row computation in the graph is
-row-independent and both the paged layout and the prefill chunking are
-pure data movement — blocks are gathered into logical order before the
+Equivalence contract (tests/test_batching.py, tests/test_scheduler.py,
+DESIGN.md §7): a request decoded through this engine emits exactly the
+tokens ``greedy_generate`` emits for it alone — for ANY priority
+assignment and admission schedule, because scheduling only reorders
+*admissions*; it never touches per-lane numerics.  Every per-row
+computation in the graph is row-independent and both the paged layout
+and the prefill chunking are pure data movement — blocks are gathered into logical order before the
 attention math, and masked tail keys contribute exactly 0.0 after
 ``exp``.  On the fast engine the per-step logits are BITWISE identical
 across packings, chunk sizes, and block-table layouts; the faithful
@@ -77,6 +86,10 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
+#: the scheduler's priority classes, in selection-preference order
+PRIORITY_CLASSES = ("interactive", "batch")
+
+
 @dataclass
 class Request:
     """One generation request.
@@ -86,6 +99,10 @@ class Request:
     ``greedy_generate(..., n_steps=max_new_tokens - 1)``).
     ``submit_time`` is seconds relative to ``ServeLoop.run`` start; the
     request is not admitted before it (Poisson replay in launch.serve).
+    ``priority`` is the admission class (DESIGN.md §7 scheduling rules):
+    ``"interactive"`` requests are admitted ahead of ``"batch"`` ones
+    (default) under the weighted, aging-bounded scheduler — priority
+    changes WHEN a request is admitted, never what it decodes to.
     """
 
     rid: int
@@ -93,6 +110,7 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     submit_time: float = 0.0
+    priority: str = "batch"  # "interactive" | "batch"
 
 
 @dataclass
@@ -106,37 +124,48 @@ class RequestResult:
     prompt runs exactly one (the single-token logit recompute).
     Requests refused at submission (prompt longer than the largest pad
     bucket) come back with ``finish_reason="refused"``, empty
-    ``tokens``, and the reason in ``error``."""
+    ``tokens``, ``None`` for every admission/finish timestamp — the
+    derived ``latency_s``/``ttft_s``/``itl_s`` are then ``None`` too,
+    never garbage — and the reason in ``error``."""
 
     rid: int
     prompt_len: int
     tokens: list[int]
     finish_reason: str  # "eos" | "length" | "refused"
     submit_time: float
-    admit_time: float
-    first_token_time: float
-    finish_time: float
+    admit_time: float | None
+    first_token_time: float | None
+    finish_time: float | None
     decode_steps: int
     logits: list[np.ndarray] | None = None  # only when collect_logits
     cached_prompt_tokens: int = 0
     prefill_chunks: int = 0
+    priority: str = "batch"
     error: str | None = None  # only when finish_reason == "refused"
 
     @property
-    def latency_s(self) -> float:
-        """End-to-end latency: submit → last token."""
+    def latency_s(self) -> float | None:
+        """End-to-end latency: submit → last token (``None`` for a
+        refused request — it never finished)."""
+        if self.finish_time is None:
+            return None
         return self.finish_time - self.submit_time
 
     @property
-    def ttft_s(self) -> float:
+    def ttft_s(self) -> float | None:
         """Time to first token: submit → first emitted token (includes
-        queueing and the chunked prefill of the prompt)."""
+        queueing and the chunked prefill of the prompt; ``None`` for a
+        refused request — it never emitted one)."""
+        if self.first_token_time is None:
+            return None
         return self.first_token_time - self.submit_time
 
     @property
-    def itl_s(self) -> float:
+    def itl_s(self) -> float | None:
         """Mean inter-token latency over the decode phase (0.0 for
-        single-token results)."""
+        single-token results, ``None`` for refused requests)."""
+        if self.first_token_time is None or self.finish_time is None:
+            return None
         n = len(self.tokens) - 1
         if n <= 0:
             return 0.0
@@ -144,7 +173,9 @@ class RequestResult:
 
 
 def _percentiles(vals) -> dict:
-    vals = sorted(vals)
+    # None timings (refused requests) never reach a percentile — the
+    # report methods filter by completed(), this guards direct callers
+    vals = sorted(v for v in vals if v is not None)
     if not vals:
         return {}
     pick = lambda q: vals[min(len(vals) - 1, int(q * len(vals)))]
@@ -168,13 +199,30 @@ class ServeReport:
     admission, ``prefix_cache_evictions`` LRU-parked blocks reclaimed
     under allocation pressure, ``prefix_cache_cow_copies`` the jitted
     copy-on-write block copies that kept shared blocks immutable.
-    ``admission_deferrals`` counts iterations in which the FIFO head
-    request was ready but pool-starved (it defers, and — FIFO-first —
-    head-of-line-blocks every later ready request); ``prefill_chunks_run``
-    totals prefill chunk steps actually executed, the device work prefix
-    caching removes.  ``trace`` (only with ``collect_trace=True``)
-    records per-iteration scheduler activity — ``{"chunks": prefill
-    chunks run, "decoded": lanes decoded}`` — for starvation analysis."""
+    ``admission_deferrals`` counts deferral EVENTS, not requests: one
+    event per admission attempt (a free lane, ready request(s) waiting)
+    in which no ready request could be admitted under pool pressure.
+    The same pool-starved request re-checked across N iterations counts
+    N events — the counter measures how often the scheduler hit the
+    wall, not how many requests did (pinned by the trace-based test in
+    tests/test_batching.py).  ``prefill_chunks_run`` totals prefill
+    chunk steps actually executed, the device work prefix caching
+    removes.
+
+    Scheduler counters (DESIGN.md §7 scheduling rules):
+    ``scheduler_skips`` counts skip events — a ready request seeing one
+    later-submitted request admitted ahead of it, whether by class
+    preference, pool-feasibility skip-ahead, or the cache-aware
+    tie-break; ``aged_admissions`` counts requests admitted via the
+    aging bound (their skip count reached ``max_queue_skip``, so they
+    became the strict head until admitted — the no-starvation
+    mechanism).
+
+    ``trace`` (only with ``collect_trace=True``) records per-iteration
+    scheduler activity — ``{"chunks": prefill chunks run, "decoded":
+    lanes decoded, "admitted": [rid, ...] in admission order,
+    "deferred": deferral events this iteration}`` — for starvation and
+    deferral-semantics analysis."""
 
     results: list[RequestResult]
     wall_s: float
@@ -188,6 +236,8 @@ class ServeReport:
     prefix_cache_evictions: int = 0
     prefix_cache_cow_copies: int = 0
     admission_deferrals: int = 0
+    scheduler_skips: int = 0
+    aged_admissions: int = 0
     prefill_chunks_run: int = 0
     reprogram_swaps: int = 0
     trace: list | None = None
@@ -205,6 +255,8 @@ class ServeReport:
         "prefix_cache_evictions",
         "prefix_cache_cow_copies",
         "admission_deferrals",
+        "scheduler_skips",
+        "aged_admissions",
         "prefill_chunks_run",
         "reprogram_swaps",
     )
@@ -220,53 +272,223 @@ class ServeReport:
     def tok_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
-    def completed(self) -> list[RequestResult]:
+    def completed(self, priority: str | None = None) -> list[RequestResult]:
         """Results that actually ran (refused requests excluded — their
-        timing fields are vacuous and would poison the percentiles)."""
-        return [r for r in self.results if r.finish_reason != "refused"]
+        timing fields are ``None`` and must stay out of every percentile
+        aggregate), optionally filtered to one priority class."""
+        return [
+            r for r in self.results
+            if r.finish_reason != "refused"
+            and (priority is None or r.priority == priority)
+        ]
 
-    def latency_percentiles(self) -> dict:
-        """End-to-end (submit → last token) latency percentiles."""
-        return _percentiles(r.latency_s for r in self.completed())
+    def latency_percentiles(self, priority: str | None = None) -> dict:
+        """End-to-end (submit → last token) latency percentiles,
+        optionally per priority class."""
+        return _percentiles(r.latency_s for r in self.completed(priority))
 
-    def ttft_percentiles(self) -> dict:
+    def ttft_percentiles(self, priority: str | None = None) -> dict:
         """Time-to-first-token percentiles — the responsiveness metric
-        chunked prefill and prefix caching target (a cached prefix skips
-        its prefill chunks entirely)."""
-        return _percentiles(r.ttft_s for r in self.completed())
+        chunked prefill, prefix caching, and the priority-class
+        scheduler target.  ``priority="interactive"`` isolates the
+        latency class the scheduler protects from batch floods."""
+        return _percentiles(r.ttft_s for r in self.completed(priority))
 
-    def itl_percentiles(self) -> dict:
+    def itl_percentiles(self, priority: str | None = None) -> dict:
         """Per-request mean inter-token-latency percentiles (decode-phase
-        smoothness; requests with a single token are excluded)."""
+        smoothness; requests with a single token are excluded),
+        optionally per priority class."""
         return _percentiles(
-            r.itl_s for r in self.completed() if len(r.tokens) > 1
+            r.itl_s for r in self.completed(priority) if len(r.tokens) > 1
         )
 
 
-class RequestQueue:
-    """Arrival-ordered FIFO: pops the earliest-submitted request whose
-    ``submit_time`` has passed."""
+@dataclass
+class _QueueEntry:
+    """One ready request plus its scheduler age.  ``order`` is the
+    global submission order key ``(submit_time, seq)`` — "earlier" means
+    an earlier arrival, ties broken by submission sequence.  ``skips``
+    counts admissions of later-submitted requests that happened while
+    this one was ready (the quantity the aging bound caps)."""
 
-    def __init__(self):
-        self._heap: list = []
+    order: tuple
+    request: Request
+    skips: int = 0
+
+
+class RequestQueue:
+    """Priority-class admission scheduler (DESIGN.md §7).
+
+    Each :class:`Request` carries a ``priority`` class —
+    ``"interactive"`` (latency-sensitive) or ``"batch"`` (throughput
+    traffic, the default).  Classes are arrival-ordered queues;
+    :meth:`select` picks the next admission by three rules, in order:
+
+    1. **Aging bound — no permanent starvation.**  A *skip* is one
+       admission of a later-submitted request while a ready request
+       waits; ``max_queue_skip`` caps each request's lifetime skips.  A
+       request at the cap is *aged*: until it admits, only it and
+       requests submitted before it are candidates (admitting an older
+       request cannot skip it further).  So for EVERY request, at most
+       ``max_queue_skip`` later-submitted requests are ever admitted
+       ahead of it — ``max_queue_skip=0`` is strict submit-order FIFO
+       (priority classes and skip-ahead disabled).
+    2. **Weighted class selection.**  While both classes hold ready
+       requests, interactive is preferred for at most
+       ``interactive_weight`` consecutive admissions, then one batch
+       request goes first — a batch flood cannot starve interactive
+       TTFT, and interactive floods cannot starve batch beyond the
+       weight (plus rule 1's hard cap).
+    3. **Cache-aware, pool-feasible pick within the class.**  Among the
+       first ``max_queue_skip + 1`` ready requests of the class, prefer
+       the longest resident prefix (the ``probe`` — parked blocks
+       become hits before eviction drains them; stable FIFO tie-break),
+       and admit the first candidate whose block need the allocator
+       covers (``try_admit``), skipping pool-starved or cache-cold
+       entries ahead of it.
+
+    Scheduling decides only WHEN a request is admitted; per-lane
+    numerics are untouched, so every request still decodes to exactly
+    its solo tokens (tests/test_scheduler.py).
+
+    Counters: ``skips`` totals skip events, ``aged_admissions`` counts
+    requests admitted via rule 1's cap, ``deferrals`` counts deferral
+    events — :meth:`select` calls that found ready request(s) but could
+    admit none under pool pressure (re-checking the same request next
+    iteration counts again)."""
+
+    def __init__(
+        self, interactive_weight: int = 4, max_queue_skip: int = 8
+    ):
+        if interactive_weight < 1:
+            raise ValueError("interactive_weight must be >= 1")
+        if max_queue_skip < 0:
+            raise ValueError("max_queue_skip must be >= 0")
+        self.interactive_weight = int(interactive_weight)
+        self.max_queue_skip = int(max_queue_skip)
+        # not-yet-arrived requests: per-class (submit_time, seq, r) heaps
+        self._pending: dict[str, list] = {c: [] for c in PRIORITY_CLASSES}
+        # arrived requests: per-class FIFO lists of _QueueEntry
+        self._ready: dict[str, list] = {c: [] for c in PRIORITY_CLASSES}
         self._seq = 0
+        # consecutive interactive admissions while batch was waiting
+        self._credit = 0
+        self.skips = 0
+        self.aged_admissions = 0
+        self.deferrals = 0
 
     def submit(self, request: Request) -> None:
+        if request.priority not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"request {request.rid}: priority must be one of "
+                f"{PRIORITY_CLASSES} (got {request.priority!r})"
+            )
         heapq.heappush(
-            self._heap, (request.submit_time, self._seq, request)
+            self._pending[request.priority],
+            (request.submit_time, self._seq, request),
         )
         self._seq += 1
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return sum(len(h) for h in self._pending.values()) + sum(
+            len(d) for d in self._ready.values()
+        )
 
     def next_arrival(self) -> float | None:
-        return self._heap[0][0] if self._heap else None
+        """Earliest submit_time among not-yet-arrived requests (ready
+        ones have, by definition, already arrived)."""
+        ts = [h[0][0] for h in self._pending.values() if h]
+        return min(ts) if ts else None
+
+    def _release(self, now: float) -> None:
+        for c in PRIORITY_CLASSES:
+            h = self._pending[c]
+            while h and h[0][0] <= now:
+                t, seq, r = heapq.heappop(h)
+                self._ready[c].append(_QueueEntry(order=(t, seq), request=r))
+
+    def has_ready(self, now: float) -> bool:
+        self._release(now)
+        return any(self._ready.values())
 
     def pop_ready(self, now: float) -> Request | None:
-        if self._heap and self._heap[0][0] <= now:
-            return heapq.heappop(self._heap)[2]
+        """Plain submit-order FIFO pop across classes — the legacy
+        surface for callers that do their own admission.  Bypasses the
+        scheduler (no skip accounting)."""
+        self._release(now)
+        heads = [d[0] for d in self._ready.values() if d]
+        if not heads:
+            return None
+        e = min(heads, key=lambda e: e.order)
+        self._ready[e.request.priority].remove(e)
+        return e.request
+
+    # -- the scheduler ------------------------------------------------------
+
+    def select(self, now: float, try_admit, probe=None):
+        """One admission attempt.  ``try_admit(request)`` must return a
+        non-None admission handle on success (committing the request's
+        resources) or None when the pool cannot cover it; ``probe``
+        optionally maps a request to its resident-prefix length for the
+        cache-aware tie-break.  Returns ``(request, handle)`` or None —
+        when ready requests existed but none could admit, that is ONE
+        deferral event."""
+        self._release(now)
+        ready_all = [e for c in PRIORITY_CLASSES for e in self._ready[c]]
+        if not ready_all:
+            return None
+        contended = all(self._ready[c] for c in PRIORITY_CLASSES)
+        aged = [e for e in ready_all if e.skips >= self.max_queue_skip]
+        if aged:
+            head = min(aged, key=lambda e: e.order)
+            # only candidates whose admission cannot age ``head`` (or
+            # any older entry) past the bound: itself and anything
+            # submitted before it, oldest first
+            cands = sorted(
+                (e for e in ready_all if e.order <= head.order),
+                key=lambda e: e.order,
+            )
+        else:
+            cands = []
+            for cls in self._class_order(contended):
+                window = self._ready[cls][: self.max_queue_skip + 1]
+                if probe is not None and len(window) > 1:
+                    # stable sort: FIFO order breaks residency ties
+                    window = sorted(
+                        window, key=lambda e: -probe(e.request)
+                    )
+                cands.extend(window)
+        for e in cands:
+            handle = try_admit(e.request)
+            if handle is not None:
+                return self._admit(e, contended), handle
+        self.deferrals += 1
         return None
+
+    def _class_order(self, contended: bool) -> tuple:
+        if contended:
+            if self._credit < self.interactive_weight:
+                return ("interactive", "batch")
+            return ("batch", "interactive")
+        return tuple(c for c in PRIORITY_CLASSES if self._ready[c])
+
+    def _admit(self, e: _QueueEntry, contended: bool) -> Request:
+        cls = e.request.priority
+        self._ready[cls].remove(e)
+        if self.max_queue_skip > 0 and e.skips >= self.max_queue_skip:
+            self.aged_admissions += 1
+        # every still-waiting earlier-submitted request was just skipped
+        for c in PRIORITY_CLASSES:
+            for e2 in self._ready[c]:
+                if e2.order < e.order:
+                    e2.skips += 1
+                    self.skips += 1
+        if contended:
+            if cls == "interactive":
+                self._credit = min(self._credit + 1, self.interactive_weight)
+            else:
+                self._credit = 0
+        return e.request
 
 
 # ---------------------------------------------------------------------------
@@ -400,11 +622,15 @@ class ServeLoop:
 
     Scheduler (DESIGN.md §7) — per iteration, in order:
 
-    1. **Admit**: every free lane takes the next ready request FIFO, if
-       the block pool can cover its full KV need
-       (``ceil((prompt_len + max_new - 1) / block_size)`` blocks,
-       eager so decode never stalls mid-stream); otherwise the request
-       waits for a retirement to free blocks.  With ``prefix_cache``
+    1. **Admit**: every free lane takes the request the priority-class
+       scheduler selects (:meth:`RequestQueue.select` — weighted
+       interactive-over-batch preference, bounded skip-ahead past
+       pool-starved heads, cache-aware tie-break, all under the
+       ``max_queue_skip`` aging bound), if the block pool can cover its
+       full KV need (``ceil((prompt_len + max_new - 1) / block_size)``
+       blocks, eager so decode never stalls mid-stream); when no ready
+       request fits, admission defers (one deferral event) until a
+       retirement frees blocks.  With ``prefix_cache``
        (default on), block-aligned prompt prefixes already resident in
        the arena are MAPPED instead of allocated (refcount bump), only
        the cold tail takes fresh blocks, and a fully cached prompt's
@@ -574,6 +800,9 @@ class ServeLoop:
         self._blocks = PrefixCache(
             self.kv_blocks, self.block_size, enabled=self.prefix_cache
         )
+        # --- priority-class scheduler knobs (DESIGN.md §7)
+        self.interactive_weight = int(config.interactive_weight)
+        self.max_queue_skip = int(config.max_queue_skip)
         # --- programmed-state generations (drift / refresh, DESIGN.md §5)
         # ``self.programmed`` is always the CURRENT generation; lanes pin
         # the pytree they were admitted on, so a swap never touches an
@@ -631,6 +860,11 @@ class ServeLoop:
 
     def _validate(self, r: Request) -> None:
         n = len(r.tokens)
+        if r.priority not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"request {r.rid}: priority must be one of "
+                f"{PRIORITY_CLASSES} (got {r.priority!r})"
+            )
         if n < 1:
             raise ValueError(f"request {r.rid}: empty prompt")
         if r.max_new_tokens < 1:
@@ -673,19 +907,25 @@ class ServeLoop:
             logits=st.logits,
             cached_prompt_tokens=st.plan.cached_len,
             prefill_chunks=st.prefill_chunks,
+            priority=st.request.priority,
         )
 
     def _refused_result(self, r: Request, msg: str) -> RequestResult:
+        # a refused request was never admitted and never emitted a
+        # token: its admit/first-token/finish timestamps are None, so
+        # the derived latencies are None (not garbage) and completed()
+        # keeps them out of every percentile aggregate
         return RequestResult(
             rid=r.rid,
             prompt_len=len(r.tokens),
             tokens=[],
             finish_reason="refused",
             submit_time=r.submit_time,
-            admit_time=r.submit_time,
-            first_token_time=r.submit_time,
-            finish_time=r.submit_time,
+            admit_time=None,
+            first_token_time=None,
+            finish_time=None,
             decode_steps=0,
+            priority=r.priority,
             error=msg,
         )
 
@@ -726,7 +966,10 @@ class ServeLoop:
         return report
 
     def _run(self, requests) -> ServeReport:
-        queue = RequestQueue()
+        queue = RequestQueue(
+            interactive_weight=self.interactive_weight,
+            max_queue_skip=self.max_queue_skip,
+        )
         for r in requests:
             queue.submit(r)
         # fresh allocator per run — cache contents and stats are
@@ -742,8 +985,6 @@ class ServeLoop:
         next_tok = np.zeros((K,), np.int32)
         active = np.zeros((K,), bool)
         results: dict[int, RequestResult] = {}
-        deferred: Request | None = None  # ready but pool-starved
-        deferrals = 0
         total_chunks = 0
         swaps = 0
         trace: list | None = [] if self.collect_trace else None
@@ -800,23 +1041,32 @@ class ServeLoop:
                     )
                     swaps += 1
                     next_refresh = t_dev + self.refresh_every
-            # 1. admit: bind ready requests to free lanes, eagerly
-            # allocating their full KV block need; a pool-starved
-            # request waits (FIFO-first) for a retirement
+            # 1. admit: the scheduler binds ready requests to free
+            # lanes per the DESIGN.md §7 rules (aging bound first, then
+            # weighted round-robin over classes, then the cache-aware
+            # pool-feasible pick), eagerly allocating each pick's full
+            # KV block need; a pool-starved request waits for a
+            # retirement unless a bounded skip-ahead can fill the lane
+            def_before = queue.deferrals
+            admitted_now: list[int] = []
+            probe = (
+                (lambda rq: self._blocks.resident_prefix_len(rq.tokens))
+                if self.prefix_cache else None
+            )
             for k in range(K):
                 if slot_state[k] is not None:
                     continue
-                r = deferred if deferred is not None else queue.pop_ready(
-                    now()
+                sel = queue.select(
+                    now(),
+                    lambda rq: self._blocks.admit(
+                        rq.tokens, self._blocks_needed(rq)
+                    ),
+                    probe=probe,
                 )
-                deferred = None
-                if r is None:
+                if sel is None:
                     break
-                plan = self._blocks.admit(r.tokens, self._blocks_needed(r))
-                if plan is None:
-                    deferred = r
-                    deferrals += 1
-                    break
+                r, plan = sel
+                admitted_now.append(r.rid)
                 bt_row = np.zeros((self.blocks_per_slot,), np.int32)
                 bt_row[: len(plan.blocks)] = plan.blocks
                 cache = self._admit(
@@ -930,21 +1180,27 @@ class ServeLoop:
                         active[k] = False
                     else:
                         next_tok[k] = t
-            elif chunks_run == 0:
+            total_chunks += chunks_run
+            # trace every iteration — including idle deferral re-checks
+            # below, so sum(t["deferred"]) == report.admission_deferrals
+            if trace is not None:
+                trace.append({
+                    "chunks": chunks_run,
+                    "decoded": decoded,
+                    "admitted": admitted_now,
+                    "deferred": queue.deferrals - def_before,
+                })
+            if decoded == 0 and chunks_run == 0:
                 if len(results) == len(requests):
                     break
-                if deferred is not None:
-                    continue  # retirement freed blocks; re-admit now
+                if queue.has_ready(now()):
+                    continue  # pool-starved; a retirement frees blocks
                 nxt = queue.next_arrival()
                 if nxt is None:  # pragma: no cover - defensive
                     break
                 wait = nxt - now()
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
-
-            total_chunks += chunks_run
-            if trace is not None:
-                trace.append({"chunks": chunks_run, "decoded": decoded})
 
         wall = now()
         ordered = [results[r.rid] for r in requests]
@@ -963,7 +1219,9 @@ class ServeLoop:
             prefix_cache_misses=alloc.misses,
             prefix_cache_evictions=alloc.evictions,
             prefix_cache_cow_copies=alloc.cow_copies,
-            admission_deferrals=deferrals,
+            admission_deferrals=queue.deferrals,
+            scheduler_skips=queue.skips,
+            aged_admissions=queue.aged_admissions,
             prefill_chunks_run=total_chunks,
             reprogram_swaps=swaps,
             trace=trace,

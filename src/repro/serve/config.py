@@ -50,6 +50,21 @@ class ServeConfig:
       buckets: prompt pad buckets (None = powers of two up to max_len).
       prefix_cache: refcounted cross-request prompt-prefix KV sharing.
 
+    Priority-class admission (DESIGN.md §7 scheduling rules):
+      interactive_weight: weighted-round-robin share of the
+        "interactive" request class — while both classes have ready
+        requests, at most this many consecutive interactive admissions
+        happen before one batch request is admitted (1 = classes
+        alternate; batch can never starve).
+      max_queue_skip: the aging bound — the maximum number of
+        later-submitted requests that may ever be admitted ahead of a
+        waiting ready request, whether by class preference, by
+        skip-ahead past its pool-starved need, or by the cache-aware
+        tie-break.  A request that has been skipped this many times
+        becomes the strict head: nothing submitted after it admits
+        until it does.  0 degenerates to the pre-scheduler strict
+        submit-order FIFO (priority classes and skip-ahead disabled).
+
     Numerics / placement:
       policy: the MemPolicy mapping layer names to DPE configs (None =
         fully digital).
@@ -90,18 +105,72 @@ class ServeConfig:
     collect_trace: bool = False
     allow_coupled_numerics: bool = False
     prefix_cache: bool = True
+    interactive_weight: int = 4
+    max_queue_skip: int = 8
     refresh_every: float | None = None
     clock: Callable[[], float] | None = None
 
     def __post_init__(self):
+        # every geometry knob is validated HERE, eagerly: a bad value
+        # that only surfaces later does so as an opaque jit shape error
+        # deep inside a serving step, not as a message naming the knob
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
         if self.max_len < 1:
             raise ValueError("max_len must be >= 1")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1 (got {self.block_size}): the "
+                "paged KV arena stores at least one token row per block"
+            )
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1 or None (got "
+                f"{self.prefill_chunk}); None = one bucket-padded chunk "
+                "per prompt"
+            )
+        if self.kv_blocks is not None and self.kv_blocks < 2:
+            raise ValueError(
+                f"kv_blocks must be >= 2 (got {self.kv_blocks}): "
+                "physical block 0 is the reserved trash block, so a "
+                "pool needs at least one more to serve any request"
+            )
+        if self.interactive_weight < 1:
+            raise ValueError(
+                f"interactive_weight must be >= 1 (got "
+                f"{self.interactive_weight}): the weighted round-robin "
+                "admits at least one interactive request per cycle"
+            )
+        if self.max_queue_skip < 0:
+            raise ValueError(
+                f"max_queue_skip must be >= 0 (got {self.max_queue_skip}"
+                "); 0 = strict submit-order FIFO admission"
+            )
         if self.refresh_every is not None and self.refresh_every <= 0:
             raise ValueError("refresh_every must be > 0 seconds (or None)")
         if self.buckets is not None:
-            object.__setattr__(self, "buckets", tuple(self.buckets))
+            buckets = tuple(self.buckets)
+            if not buckets:
+                raise ValueError("buckets must be non-empty (or None)")
+            if any(
+                not isinstance(b, int) or isinstance(b, bool) or b < 1
+                for b in buckets
+            ):
+                raise ValueError(
+                    f"buckets must be positive ints (got {buckets!r})"
+                )
+            if any(a >= b for a, b in zip(buckets, buckets[1:])):
+                raise ValueError(
+                    f"buckets must be strictly increasing (got {buckets}"
+                    "): the prefill picks the first bucket >= prompt_len"
+                )
+            if buckets[-1] > self.max_len:
+                raise ValueError(
+                    f"largest bucket ({buckets[-1]}) exceeds max_len "
+                    f"({self.max_len}): a bucket-padded prefill would "
+                    "overrun the per-slot KV budget"
+                )
+            object.__setattr__(self, "buckets", buckets)
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

@@ -132,6 +132,31 @@ class PrefixCache:
         self.cow_copies = 0
         self.blocks_reused = 0
 
+    # -- residency probe ----------------------------------------------------
+
+    def resident_prefix_len(self, tokens) -> int:
+        """Prompt tokens covered by the longest chain of REGISTERED
+        prefix blocks — live-shared or parked alike — without touching
+        any state (no refcount bump, no LRU reordering, no counters).
+
+        This is the scheduler's cache-awareness probe (DESIGN.md §7):
+        among ready same-class requests it prefers the one whose prefix
+        is already resident, turning parked blocks into hits before
+        allocation pressure evicts them.  Pure lookup, so probing a
+        candidate the scheduler then does NOT admit has no effect; a
+        nonzero answer can still go stale (eviction between probe and
+        admission), which costs only the preference, never correctness
+        — admission re-runs the real lookup.  Returns 0 when the cache
+        is disabled (every candidate ties; FIFO order decides)."""
+        if not self.enabled:
+            return 0
+        n = 0
+        for h in chain_hashes(tokens, self.block_size):
+            if h not in self._block_of:
+                break
+            n += 1
+        return n * self.block_size
+
     # -- allocation ---------------------------------------------------------
 
     def admit(self, tokens, need: int) -> AdmitPlan | None:

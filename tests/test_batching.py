@@ -414,6 +414,101 @@ def test_rejects_unsupported_and_coupled(model):
         )
 
 
+def test_refused_request_timing_is_none_and_stays_out_of_percentiles(
+    model, programmed
+):
+    """A refused request (prompt longer than the largest pad bucket)
+    never set ``first_token_time``; its derived latencies must be None —
+    not garbage offsets from a zero timestamp — and every percentile
+    aggregate must exclude it."""
+    cfg, params = model
+    rng = np.random.default_rng(17)
+    ok = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    too_long = rng.integers(0, cfg.vocab, size=40).astype(np.int32)
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32,
+        ), programmed=programmed["fast"],
+    )
+    rep = loop.run([
+        Request(rid=0, tokens=ok, max_new_tokens=3),
+        Request(rid=1, tokens=too_long, max_new_tokens=3),
+    ])
+    ref = rep.results[1]
+    assert ref.finish_reason == "refused" and ref.error
+    assert ref.admit_time is None
+    assert ref.first_token_time is None
+    assert ref.finish_time is None
+    assert ref.latency_s is None
+    assert ref.ttft_s is None
+    assert ref.itl_s is None
+    # aggregates see only the served request
+    assert [r.rid for r in rep.completed()] == [0]
+    for pct in (
+        rep.latency_percentiles(), rep.ttft_percentiles(),
+        rep.itl_percentiles(),
+    ):
+        for v in pct.values():
+            assert v is not None and np.isfinite(v)
+    served = rep.results[0]
+    assert served.ttft_s is not None and served.ttft_s >= 0
+
+
+def test_serve_config_validates_geometry_eagerly():
+    """Bad geometry knobs must fail at construction with a message that
+    names the knob — not later as an opaque jit shape error."""
+    good = ServeConfig(max_len=32)
+    assert good.max_len == 32
+    cases = [
+        ({"block_size": 0}, "block_size"),
+        ({"block_size": -4}, "block_size"),
+        ({"prefill_chunk": 0}, "prefill_chunk"),
+        ({"kv_blocks": 1}, "kv_blocks"),
+        ({"interactive_weight": 0}, "interactive_weight"),
+        ({"max_queue_skip": -1}, "max_queue_skip"),
+        ({"buckets": ()}, "buckets"),
+        ({"buckets": (8, 0)}, "buckets"),
+        ({"buckets": (16, 8)}, "strictly increasing"),
+        ({"buckets": (8, 8)}, "strictly increasing"),
+        ({"buckets": (8, 64), "max_len": 32}, "max_len"),
+    ]
+    for kw, match in cases:
+        with pytest.raises(ValueError, match=match):
+            ServeConfig(**kw)
+    # valid buckets normalise to a tuple and survive
+    assert ServeConfig(buckets=[8, 16], max_len=32).buckets == (8, 16)
+
+
+def test_admission_deferral_counts_events_not_requests(model, programmed):
+    """``admission_deferrals`` counts deferral EVENTS: the same
+    pool-starved request re-checked across N iterations counts N times.
+    The per-iteration trace carries each event, so the trace sum IS the
+    report counter."""
+    cfg, params = model
+    rng = np.random.default_rng(19)
+    workload = [(16, 8)] * 4  # 3 blocks each (bs=8); pool fits 2 lanes
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l, _ in workload
+    ]
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=POLICIES["fast"], slots=3, max_len=MAX_LEN,
+            prefill_chunk=8, block_size=8, kv_blocks=7,
+            compute_dtype=jnp.float32, collect_trace=True,
+        ), programmed=programmed["fast"],
+    )
+    rep = loop.run(_requests(prompts, workload))
+    assert rep.admission_deferrals > 0
+    assert rep.trace is not None
+    assert sum(t["deferred"] for t in rep.trace) == rep.admission_deferrals
+    # a deferral event means requests waited while the wall was hit more
+    # than once per waiting request — events can exceed request count
+    assert rep.admission_deferrals >= 2
+    assert all(len(r.tokens) == m for r, (_, m) in zip(rep.results, workload))
+
+
 _SHARD_SCRIPT = textwrap.dedent(
     """
     import os

@@ -14,6 +14,11 @@ Properties (fast engine — bitwise row-independent by construction):
   are disjoint and exactly cover blocks ``1..kv_blocks-1``; block 0
   (trash) is never handed out, and refcounts never go below 1 while
   held.
+* **Scheduling is invisible to numerics and never starves**: for ANY
+  priority assignment, arrival order, and aging bound, every request's
+  tokens equal solo ``greedy_generate`` on its prompt, and the recorded
+  scheduler trace shows no request overtaken by more than
+  ``max_queue_skip`` later-submitted requests (DESIGN.md §7).
 
 When ``hypothesis`` is installed the properties are checked over random
 workloads; otherwise a deterministic grid of representative workloads
@@ -36,7 +41,13 @@ from repro.configs import get_smoke
 from repro.core import DPEConfig, spec
 from repro.core.layers import MemPolicy
 from repro.models import init_params, program_params
-from repro.serve import PrefixCache, Request, ServeConfig, ServeLoop
+from repro.serve import (
+    PrefixCache,
+    Request,
+    ServeConfig,
+    ServeLoop,
+    greedy_generate,
+)
 
 INT8 = spec("int8")
 FAST = MemPolicy(
@@ -172,6 +183,75 @@ def check_allocator_partition(seed, n_blocks, block_size, n_ops):
     assert not pc.live_blocks, "references leaked past release"
 
 
+_SOLO = {}
+
+
+def _solo_tokens(tokens, max_new):
+    """Memoised solo greedy reference (prompts repeat across examples
+    far less than shapes do, but greedy_generate's jit cache makes even
+    cold calls cheap after the first shape)."""
+    cfg, params, prog = _model()
+    key = (tokens.tobytes(), max_new)
+    if key not in _SOLO:
+        ref = greedy_generate(
+            params, cfg, jnp.asarray(tokens)[None], max_new - 1,
+            policy=FAST, compute_dtype=jnp.float32, programmed=prog,
+            max_len=MAX_LEN,
+        )
+        _SOLO[key] = list(np.asarray(ref[0]))
+    return _SOLO[key]
+
+
+def check_scheduler_solo_tokens_and_aging_bound(
+    seed, n_requests, slots, max_skip
+):
+    """Any priority assignment + submission order: tokens == solo greedy
+    for every request, and no request is overtaken by more than
+    ``max_queue_skip`` later-submitted requests (from the trace)."""
+    cfg, params, prog = _model()
+    wl = _workload(seed, n_requests)
+    rng = np.random.default_rng(seed + 2)
+    order = list(rng.permutation(n_requests))
+    prios = [
+        "interactive" if rng.integers(2) else "batch"
+        for _ in range(n_requests)
+    ]
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=FAST, slots=slots, max_len=MAX_LEN,
+            compute_dtype=jnp.float32, collect_trace=True,
+            interactive_weight=1 + int(rng.integers(4)),
+            max_queue_skip=max_skip,
+        ), programmed=prog,
+    )
+    reqs = [
+        Request(rid=i, tokens=wl[i][0], max_new_tokens=wl[i][1],
+                priority=prios[i])
+        for i in order
+    ]
+    rep = loop.run(reqs)
+    for res in rep.results:
+        assert res.tokens == _solo_tokens(*wl[res.rid]), (
+            f"rid {res.rid} ({res.priority}) diverged from solo"
+        )
+    # no-starvation: submission position = index in reqs (equal
+    # submit_time, queue seq = list order); count later-submitted
+    # requests admitted ahead of each request
+    admitted = [rid for t in rep.trace for rid in t["admitted"]]
+    assert sorted(admitted) == sorted(r.rid for r in reqs)
+    sub_pos = {r.rid: i for i, r in enumerate(reqs)}
+    for pos, rid in enumerate(admitted):
+        overtaken_by = sum(
+            1 for o in admitted[:pos] if sub_pos[o] > sub_pos[rid]
+        )
+        assert overtaken_by <= max_skip, (
+            f"rid {rid} overtaken {overtaken_by}x (bound {max_skip}); "
+            f"admitted={admitted}, prios={prios}"
+        )
+    if max_skip == 0:
+        assert admitted == [r.rid for r in reqs], "FIFO mode reordered"
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=8, deadline=None)
@@ -198,6 +278,20 @@ if HAVE_HYPOTHESIS:
     )
     def test_allocator_partition(seed, n_blocks, block_size, n_ops):
         check_allocator_partition(seed, n_blocks, block_size, n_ops)
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(1, 5),
+        st.integers(1, 3),
+        st.integers(0, 4),
+    )
+    def test_scheduler_solo_tokens_and_aging_bound(
+        seed, n_requests, slots, max_skip
+    ):
+        check_scheduler_solo_tokens_and_aging_bound(
+            seed, n_requests, slots, max_skip
+        )
 
 else:
 
@@ -227,3 +321,14 @@ else:
     )
     def test_allocator_partition(seed, n_blocks, block_size, n_ops):
         check_allocator_partition(seed, n_blocks, block_size, n_ops)
+
+    @pytest.mark.parametrize(
+        "seed,n_requests,slots,max_skip",
+        [(0, 4, 2, 0), (1, 5, 1, 2), (2, 3, 3, 4), (3, 5, 2, 1)],
+    )
+    def test_scheduler_solo_tokens_and_aging_bound(
+        seed, n_requests, slots, max_skip
+    ):
+        check_scheduler_solo_tokens_and_aging_bound(
+            seed, n_requests, slots, max_skip
+        )

@@ -1,0 +1,416 @@
+"""Priority-class admission scheduler suite (serve/batching.py, DESIGN.md §7).
+
+Contract under test:
+
+* **Scheduling reorders admissions, never numerics.**  For any priority
+  assignment and any admission schedule, every request's tokens equal
+  solo ``greedy_generate`` on its prompt — and on the fast path the
+  per-step logits are bit-identical between the FIFO baseline
+  (``max_queue_skip=0``) and the full scheduler, including with the
+  Pallas kernels forced.
+* **A batch flood cannot starve interactive TTFT.**  With one decode
+  lane and a flood of batch requests submitted ahead of an interactive
+  one, the scheduler admits the interactive request first; the FIFO
+  baseline admits it last (admission order pinned by the trace).
+* **Bounded skip-ahead past a pool-starved head.**  A request whose
+  block need exceeds the free pool defers, but a later request that
+  fits is admitted past it — the head no longer blocks the line.
+* **Aging bound — no permanent starvation.**  For EVERY request, the
+  number of later-submitted requests admitted ahead of it never exceeds
+  ``max_queue_skip`` (asserted from the recorded scheduler trace), and
+  ``max_queue_skip=0`` degenerates to strict submit-order FIFO.
+* **Cache-aware tie-break.**  Among ready same-class requests, one
+  whose prefix chain is parked in the :class:`PrefixCache` is admitted
+  ahead of a cache-cold earlier arrival (within the aging bound),
+  turning parked blocks into hits before eviction drains them.
+
+The pure-queue tests at the top exercise :class:`RequestQueue` directly
+(no model, no device); the loop tests below drive the real ``ServeLoop``
+on the smoke model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, spec
+from repro.core.layers import MemPolicy
+from repro.kernels import ops as kops
+from repro.models import init_params, program_params
+from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
+from repro.serve.batching import PRIORITY_CLASSES, RequestQueue
+
+INT8 = spec("int8")
+FAST = MemPolicy(
+    default=DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
+)
+MAX_LEN = 32
+
+
+# ---------------------------------------------------------------------------
+# pure-queue scheduler tests (no model)
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, priority="batch", t=0.0, plen=4):
+    return Request(
+        rid=rid, tokens=np.zeros(plen, np.int32), max_new_tokens=2,
+        submit_time=t, priority=priority,
+    )
+
+
+def _drain(q, try_admit=lambda r: True, probe=None, now=0.0):
+    """Admit until empty; returns the admitted rid order."""
+    order = []
+    while len(q):
+        sel = q.select(now, try_admit, probe=probe)
+        if sel is None:
+            break
+        order.append(sel[0].rid)
+    return order
+
+
+def test_queue_rejects_unknown_priority():
+    q = RequestQueue()
+    with pytest.raises(ValueError, match="priority"):
+        q.submit(_req(0, priority="realtime"))
+
+
+def test_queue_interactive_preferred_up_to_weight():
+    """Under contention interactive goes first for ``interactive_weight``
+    consecutive admissions, then exactly one batch request — so a batch
+    flood cannot starve interactive and vice versa."""
+    q = RequestQueue(interactive_weight=2, max_queue_skip=100)
+    for i in range(4):
+        q.submit(_req(i, "interactive"))
+    for i in range(4, 8):
+        q.submit(_req(i, "batch"))
+    order = _drain(q)
+    # i i b i i b b b: after each weight-2 interactive burst one batch
+    # admission resets the credit; leftovers drain in arrival order
+    assert order == [0, 1, 4, 2, 3, 5, 6, 7]
+    assert q.deferrals == 0
+
+
+def test_queue_zero_skip_is_strict_fifo():
+    """``max_queue_skip=0``: submit order wins regardless of class — the
+    pre-scheduler FIFO admission, bit-for-bit."""
+    q = RequestQueue(max_queue_skip=0)
+    prios = ["batch", "interactive", "batch", "interactive"]
+    for i, p in enumerate(prios):
+        q.submit(_req(i, p))
+    assert _drain(q) == [0, 1, 2, 3]
+    assert q.skips == 0 and q.aged_admissions == 0
+
+
+def test_queue_aging_bound_forces_fifo_head():
+    """A request skipped ``max_queue_skip`` times becomes the strict
+    head: nothing submitted after it admits until it does."""
+    q = RequestQueue(interactive_weight=10, max_queue_skip=2)
+    q.submit(_req(0, "batch"))
+    for i in range(1, 6):
+        q.submit(_req(i, "interactive"))
+    order = _drain(q)
+    # interactive 1, 2 admit (rid 0 now aged at 2 skips), then rid 0
+    # MUST go before any younger request; the rest drain in order
+    assert order == [1, 2, 0, 3, 4, 5]
+    assert q.aged_admissions == 1
+    assert q.skips == 2
+
+
+def test_queue_pool_starved_head_skipped_within_bound():
+    """``try_admit`` refusing the head admits the first later request it
+    accepts; each such skip-ahead ages the head, and a refusal with no
+    admissible candidate counts one deferral event per select() call."""
+    q = RequestQueue(interactive_weight=4, max_queue_skip=3)
+    for i in range(3):
+        q.submit(_req(i, "batch"))
+    admit_small = lambda r: True if r.rid != 0 else None
+    sel = q.select(0.0, admit_small)
+    assert sel[0].rid == 1
+    sel = q.select(0.0, admit_small)
+    assert sel[0].rid == 2
+    assert q.skips == 2  # rid 0 skipped twice
+    # nothing admissible left -> one deferral event per attempt
+    assert q.select(0.0, lambda r: None) is None
+    assert q.select(0.0, lambda r: None) is None
+    assert q.deferrals == 2
+    sel = q.select(0.0, lambda r: True)
+    assert sel[0].rid == 0
+    assert q.aged_admissions == 0  # admitted below the bound
+
+
+def test_queue_cache_probe_breaks_ties_stably():
+    """Within a class the longest resident prefix wins; ties keep FIFO
+    order (stable sort), and the probe never overrides the aging bound."""
+    q = RequestQueue(interactive_weight=4, max_queue_skip=4)
+    for i in range(4):
+        q.submit(_req(i, "batch"))
+    resident = {2: 16, 3: 16}  # rids 2 and 3 are cache-warm
+    probe = lambda r: resident.get(r.rid, 0)
+    assert _drain(q, probe=probe) == [2, 3, 0, 1]
+    # bound still honoured: 0 and 1 each skipped twice, under the cap
+    assert q.aged_admissions == 0
+
+
+def test_queue_submit_time_gates_readiness():
+    """A request is never admitted before its ``submit_time``; ready
+    probes release arrivals up to ``now``."""
+    q = RequestQueue()
+    q.submit(_req(0, t=5.0))
+    q.submit(_req(1, t=1.0))
+    assert not q.has_ready(0.5)
+    assert q.next_arrival() == 1.0
+    assert q.select(0.5, lambda r: True) is None
+    assert q.deferrals == 0  # nothing READY yet: not a deferral event
+    sel = q.select(1.0, lambda r: True)
+    assert sel[0].rid == 1
+    sel = q.select(6.0, lambda r: True)
+    assert sel[0].rid == 0
+
+
+# ---------------------------------------------------------------------------
+# loop tests (smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def programmed(model):
+    cfg, params = model
+    return program_params(params, cfg, FAST, jax.random.PRNGKey(0))
+
+
+@pytest.fixture
+def force_kernels():
+    prev = kops.set_interpret(True)
+    yield
+    kops.set_interpret(prev)
+
+
+def _loop(model, programmed, **kw):
+    cfg, params = model
+    kw.setdefault("slots", 1)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("collect_trace", True)
+    return ServeLoop(
+        params, cfg, ServeConfig(
+            policy=FAST, compute_dtype=jnp.float32, **kw,
+        ), programmed=programmed,
+    )
+
+
+def _solo(model, programmed, p, m):
+    cfg, params = model
+    ref = greedy_generate(
+        params, cfg, jnp.asarray(p)[None], m - 1, policy=FAST,
+        compute_dtype=jnp.float32, programmed=programmed, max_len=MAX_LEN,
+    )
+    return list(np.asarray(ref[0]))
+
+
+def _admitted_order(report):
+    return [rid for t in report.trace for rid in t["admitted"]]
+
+
+def _assert_aging_bound(report, requests, bound):
+    """The no-starvation invariant, from the recorded trace: for every
+    request, the number of LATER-SUBMITTED requests admitted before it
+    never exceeds ``bound``.  (Submission order = position in
+    ``requests``; all tests here submit at distinct or equal times with
+    list order as the tie-break, matching the queue's ``(t, seq)``.)"""
+    order = _admitted_order(report)
+    sub_pos = {r.rid: i for i, r in enumerate(requests)}
+    admitted_pos = {rid: i for i, rid in enumerate(order)}
+    for rid, apos in admitted_pos.items():
+        skipped_by = [
+            o for o in order[:apos] if sub_pos[o] > sub_pos[rid]
+        ]
+        assert len(skipped_by) <= bound, (
+            f"rid {rid} skipped by {len(skipped_by)} later-submitted "
+            f"requests {skipped_by} (bound {bound}); order={order}"
+        )
+
+
+def _flood(cfg, n_batch=5, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+            max_new_tokens=3, priority="batch",
+        )
+        for i in range(n_batch)
+    ]
+    reqs.append(Request(
+        rid=n_batch,
+        tokens=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+        max_new_tokens=3, priority="interactive",
+    ))
+    return reqs
+
+
+def test_batch_flood_does_not_starve_interactive(model, programmed):
+    """One lane, five batch requests submitted ahead of one interactive:
+    the scheduler admits the interactive request FIRST; strict FIFO
+    (max_queue_skip=0) admits it LAST.  Both legs emit exactly the solo
+    tokens for every request — scheduling moved admissions, not bits."""
+    cfg, _ = model
+    reqs = _flood(cfg)
+    sched = _loop(model, programmed, max_queue_skip=8).run(
+        [Request(**vars(r)) for r in reqs]
+    )
+    fifo = _loop(model, programmed, max_queue_skip=0).run(
+        [Request(**vars(r)) for r in reqs]
+    )
+    assert _admitted_order(sched)[0] == 5, _admitted_order(sched)
+    assert _admitted_order(fifo) == [0, 1, 2, 3, 4, 5]
+    assert sched.scheduler_skips > 0
+    assert fifo.scheduler_skips == 0
+    # per-class aggregates see only their class
+    tp = sched.ttft_percentiles("interactive")
+    assert tp and tp["p95"] <= sched.ttft_percentiles("batch")["p50"]
+    for rep in (sched, fifo):
+        for res, r in zip(rep.results, reqs):
+            assert res.priority == r.priority
+            assert res.tokens == _solo(
+                model, programmed, r.tokens, r.max_new_tokens
+            ), f"rid {res.rid}"
+    _assert_aging_bound(sched, reqs, 8)
+
+
+def test_skip_ahead_past_pool_starved_head(model, programmed):
+    """kv_blocks=7 (6 usable), block_size=8: rid 0 takes 4 blocks, rid 1
+    also needs 4 and defers, rid 2 needs 2 and is admitted PAST the
+    starved head — which still admits once blocks free (trace-pinned),
+    within the aging bound."""
+    cfg, _ = model
+    rng = np.random.default_rng(1)
+    mk = lambda rid, plen, new: Request(
+        rid=rid, tokens=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+        max_new_tokens=new,
+    )
+    reqs = [mk(0, 20, 8), mk(1, 20, 8), mk(2, 10, 4)]
+    rep = _loop(
+        model, programmed, slots=3, block_size=8, kv_blocks=7,
+        prefill_chunk=8, max_queue_skip=4,
+    ).run(reqs)
+    order = _admitted_order(rep)
+    assert order.index(2) < order.index(1), order
+    assert rep.scheduler_skips >= 1
+    assert rep.admission_deferrals >= 1
+    _assert_aging_bound(rep, reqs, 4)
+    for res, r in zip(rep.results, reqs):
+        assert res.tokens == _solo(
+            model, programmed, r.tokens, r.max_new_tokens
+        ), f"rid {res.rid}"
+
+
+def test_aging_bound_admits_skipped_head(model, programmed):
+    """max_queue_skip=1 with an interactive flood behind a batch head:
+    the head is skipped exactly once, ages, and admits ahead of the
+    remaining flood — ``aged_admissions`` counts it and the trace
+    proves the bound."""
+    cfg, _ = model
+    rng = np.random.default_rng(2)
+    reqs = [Request(
+        rid=0, tokens=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+        max_new_tokens=2, priority="batch",
+    )]
+    for i in range(1, 5):
+        reqs.append(Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+            max_new_tokens=2, priority="interactive",
+        ))
+    rep = _loop(
+        model, programmed, interactive_weight=8, max_queue_skip=1,
+    ).run(reqs)
+    order = _admitted_order(rep)
+    assert order == [1, 0, 2, 3, 4], order
+    assert rep.aged_admissions == 1
+    _assert_aging_bound(rep, reqs, 1)
+
+
+def test_cache_aware_admission_prefers_resident_prefix(model, programmed):
+    """One lane: rid 0 parks its prefix blocks at retirement; rid 2
+    shares that prefix while rid 1 is cache-cold.  The scheduler admits
+    rid 2 ahead of rid 1 (turning the parked blocks into hits); strict
+    FIFO admits in submit order and sees no hit before rid 2 anyway."""
+    cfg, _ = model
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    cold = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    reqs = lambda: [
+        Request(rid=0, tokens=shared, max_new_tokens=2),
+        Request(rid=1, tokens=cold, max_new_tokens=2),
+        Request(rid=2, tokens=shared, max_new_tokens=2),
+    ]
+    sched = _loop(
+        model, programmed, block_size=8, max_queue_skip=4,
+    ).run(reqs())
+    fifo = _loop(
+        model, programmed, block_size=8, max_queue_skip=0,
+    ).run(reqs())
+    assert _admitted_order(sched) == [0, 2, 1]
+    assert _admitted_order(fifo) == [0, 1, 2]
+    assert sched.prefix_cache_hits >= 2  # rid 2's two-block hit
+    for rep in (sched, fifo):
+        for res, r in zip(rep.results, reqs()):
+            assert res.tokens == _solo(
+                model, programmed, r.tokens, r.max_new_tokens
+            ), f"rid {res.rid}"
+
+
+def test_scheduler_bitwise_vs_fifo_kernels_forced(
+    model, programmed, force_kernels
+):
+    """Pallas kernels forced (interpret on CPU): the scheduler leg and
+    the FIFO leg produce BIT-identical per-step logits for every request
+    in a mixed-priority workload — admission order moves data between
+    iterations, never through different arithmetic."""
+    cfg, _ = model
+    reqs = _flood(cfg, n_batch=3, seed=4)
+    runs = {}
+    for skip in (0, 8):
+        rep = _loop(
+            model, programmed, slots=2, block_size=8,
+            max_queue_skip=skip, collect_logits=True,
+        ).run([Request(**vars(r)) for r in reqs])
+        runs[skip] = rep.results
+    # the two legs really scheduled differently
+    for a, b in zip(runs[0], runs[8]):
+        assert a.tokens == b.tokens, f"rid {a.rid}"
+        assert len(a.logits) == len(b.logits)
+        for i, (x, y) in enumerate(zip(a.logits, b.logits)):
+            assert np.array_equal(x, y), f"rid {a.rid} step {i}"
+    for res, r in zip(runs[8], reqs):
+        assert res.tokens == _solo(
+            model, programmed, r.tokens, r.max_new_tokens
+        ), f"rid {res.rid}"
+
+
+def test_priority_permutation_invariant_within_class(model, programmed):
+    """Reordering the submission list WITHIN a class (same submit_time)
+    does not change any request's tokens — per-request outcomes depend
+    on the prompt, never on the neighbours or the admission slot."""
+    cfg, _ = model
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+        for l in (4, 7, 5, 6)
+    ]
+    mk = lambda perm: [
+        Request(rid=i, tokens=prompts[i], max_new_tokens=3)
+        for i in perm
+    ]
+    rep_a = _loop(model, programmed, slots=2).run(mk([0, 1, 2, 3]))
+    rep_b = _loop(model, programmed, slots=2).run(mk([2, 0, 3, 1]))
+    toks_a = {r.rid: r.tokens for r in rep_a.results}
+    toks_b = {r.rid: r.tokens for r in rep_b.results}
+    assert toks_a == toks_b
