@@ -99,6 +99,24 @@ CHECKS = (
      "serve_drift_refresh.err_last_wave_stale_over_refreshed"),
     ("serve_drift_refresh itl",
      "serve_drift_refresh.itl_p50_stale_over_refreshed"),
+    # speculative decoding (DESIGN.md §7): deterministic degeneracy —
+    # a draft with the target's own numerics must be accepted EXACTLY
+    # always (1.0) with the token stream bitwise the non-speculative
+    # one (1.0); the wall-clock tok/s win of the batched multi-token
+    # verify in the per-call regime (fixed per-forward programming
+    # cost, the simulator's analogue of weight-fetch-bound decode)
+    # with its own tokens-match indicator; and the kernels-forced
+    # sampled batched==solo-oracle indicator (1.0 = holds)
+    ("serve_speculative degeneracy acceptance",
+     "serve_speculative.greedy_degeneracy.acceptance"),
+    ("serve_speculative degeneracy tokens",
+     "serve_speculative.greedy_degeneracy.tokens_match_plain"),
+    ("serve_speculative percall speedup",
+     "serve_speculative.faithful_percall.speedup_spec_vs_plain"),
+    ("serve_speculative percall tokens",
+     "serve_speculative.faithful_percall.tokens_match_plain"),
+    ("serve_speculative sampled kernels eq",
+     "serve_speculative.sampled_batched_eq_solo_interpret"),
     # Pallas serving kernels (deterministic indicators — interpret-mode
     # wall time is meaningless on the CPU runner, so the gate pins the
     # numerics contract and the analytic traffic wins instead):

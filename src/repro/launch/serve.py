@@ -52,7 +52,9 @@ from repro import configs as arch_configs
 from repro.core import DriftModel
 from repro.launch.dryrun import make_policy
 from repro.models import init_params, program_params, programmed_byte_size
-from repro.serve import Request, ServeConfig, ServeLoop, greedy_generate
+from repro.serve import (
+    Request, SamplingParams, ServeConfig, ServeLoop, greedy_generate,
+)
 
 
 def _onoff(ap, name, default, help):
@@ -125,6 +127,30 @@ def main(argv=None):
                     help="prepend a common N-token preamble to every "
                          "request's prompt (system-prompt simulation — "
                          "what the prefix cache deduplicates)")
+    ap.add_argument("--sample", type=float, default=0.0,
+                    help="sampling temperature for the served requests "
+                         "(0 = greedy).  Per-request seeds: request i "
+                         "draws with fold_in(PRNGKey(seed_base + i), "
+                         "emission_index), so tokens are identical to "
+                         "solo decoding whatever the packing")
+    ap.add_argument("--top_k", type=int, default=0,
+                    help="top-k truncation for --sample (0 = off)")
+    ap.add_argument("--top_p", type=float, default=1.0,
+                    help="nucleus truncation for --sample (1.0 = off)")
+    ap.add_argument("--sample_seed", type=int, default=0,
+                    help="base of the per-request sampling seeds")
+    ap.add_argument("--spec_k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed "
+                         "per slot per round (0 = off).  The draft "
+                         "engine proposes, the programmed target "
+                         "verifies all k+1 positions in one batched "
+                         "forward; emitted tokens are EXACTLY the "
+                         "non-speculative trajectory")
+    ap.add_argument("--draft_policy", default="digital",
+                    choices=["digital", "mem_fast", "mem_faithful"],
+                    help="numerics of the speculative draft engine "
+                         "(folded from the same params; digital = the "
+                         "cheap software draft)")
     ap.add_argument("--kernels", default="auto",
                     choices=("auto", "off", "interpret", "on"),
                     help="Pallas serving kernels: auto (on iff TPU), off "
@@ -293,6 +319,9 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
     max_len = args.max_len or int(
         lens.max() + args.shared_prefix + args.gen + 1
     )
+    draft_policy = None
+    if args.spec_k and args.draft_policy != "digital":
+        draft_policy = _row_independent(make_policy(args.draft_policy))
     loop = ServeLoop(
         params, cfg, ServeConfig(
             policy=policy, slots=args.slots, max_len=max_len,
@@ -305,6 +334,8 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
             interactive_weight=args.interactive_weight,
             max_queue_skip=args.max_queue_skip,
             refresh_every=args.refresh_every,
+            spec_k=args.spec_k,
+            draft_policy=draft_policy,
         ), programmed=programmed,
     )
     # priority assignment: the first ceil(mix*N) requests of a random
@@ -314,6 +345,14 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
             : int(np.ceil(args.priority_mix * args.requests))
         ].tolist()
     )
+    def _sampling(i):
+        if args.sample <= 0:
+            return None
+        return SamplingParams(
+            temperature=args.sample, top_k=args.top_k, top_p=args.top_p,
+            seed=args.sample_seed + i,
+        )
+
     reqs = [
         Request(
             rid=i,
@@ -326,6 +365,7 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
             max_new_tokens=args.gen,
             submit_time=float(arrivals[i]),
             priority="interactive" if i in interactive else "batch",
+            sampling=_sampling(i),
         )
         for i in range(args.requests)
     ]
@@ -395,6 +435,23 @@ def _serve_continuous(args, cfg, policy, params, programmed, mesh):
     if args.refresh_every is not None:
         print(f"crossbar refresh: {report.reprogram_swaps} generation "
               f"swaps (every {args.refresh_every:g}s of device time)")
+    if args.spec_k:
+        acc = report.acceptance_rate
+        per_req = [
+            r.acceptance for r in report.completed()
+            if r.acceptance is not None
+        ]
+        print(
+            f"speculative k={args.spec_k} [{args.draft_policy} draft]: "
+            f"{report.tokens_accepted}/{report.tokens_drafted} drafts "
+            f"accepted"
+            + (f" ({acc:.3f})" if acc is not None else "")
+            + (
+                f", per-request acceptance p50="
+                f"{float(np.median(per_req)):.3f}"
+                if per_req else ""
+            )
+        )
     print("counters:", report.counters())
     print("sample:", report.results[0].tokens[:16])
     return report

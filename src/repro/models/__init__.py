@@ -5,7 +5,9 @@ any architecture can run on simulated memristive hardware with layer-wise
 precision — MemIntelli's technique as a first-class LM feature.
 """
 from .config import ArchConfig, MoEConfig, SSMConfig, EncoderConfig
-from .model import init_params, forward, decode_step, loss_fn
+from .model import (
+    init_params, forward, decode_step, decode_verify_step, loss_fn,
+)
 from .programmed import program_params, programmed_byte_size
 
 __all__ = [
@@ -16,6 +18,7 @@ __all__ = [
     "init_params",
     "forward",
     "decode_step",
+    "decode_verify_step",
     "loss_fn",
     "program_params",
     "programmed_byte_size",

@@ -52,6 +52,7 @@ __all__ = [
     "attention_block",
     "decode_attention_block",
     "chunk_attention_block",
+    "verify_attention_block",
     "init_kv_cache",
     "TRASH_BLOCK",
 ]
@@ -307,6 +308,77 @@ def _paged_token_write(pool, block_tables, pos, val, active):
     return pool.at[blk, pos % bsz].set(val)
 
 
+def attention_verify(q, k_cache, v_cache, pos, *, window=0):
+    """Multi-token decode attention for speculative verification.
+
+    q: (B, C, H, dh) — per slot, C consecutive query positions starting
+    at ``pos[b]``; caches: (B, S_max, KV, dh) in logical order (already
+    gathered from the paged pool, the chunk's C new entries written).
+    Position ``c`` of slot ``b`` attends under the ``ki <= pos[b] + c``
+    mask, so keys written for LATER chunk positions — and any stale
+    junk a rejected earlier draft left beyond the mask — contribute
+    exactly 0.0 after ``exp`` (the trash-block argument): row
+    ``(b, c)`` is bitwise the output :func:`attention_decode` computes
+    for a single query at ``pos[b] + c`` over the same valid prefix.
+    The C-axis rides along the einsum batch dims; the per-row reduction
+    order over ``dh`` / ``S`` is unchanged.
+    """
+    b, c, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = dh**-0.5
+    k_cache = constrain(k_cache, "batch", "kv_seq", None, "head_dim")
+    v_cache = constrain(v_cache, "batch", "kv_seq", None, "head_dim")
+    qg = q.reshape(b, c, kvh, g, dh)
+    s = (
+        jnp.einsum(
+            "bckgd,bskd->bckgs",
+            qg.astype(k_cache.dtype),
+            k_cache,
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )
+    ki = jnp.arange(k_cache.shape[1])[None, None, :]
+    qpos = (pos[:, None] + jnp.arange(c)[None, :])[:, :, None]
+    mask = ki <= qpos
+    if window > 0:
+        mask &= ki > qpos - window
+    s = jnp.where(mask[:, :, None, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bckgs,bskd->bckgd", (p / l).astype(v_cache.dtype), v_cache
+    )
+    return out.reshape(b, c, h, dh)
+
+
+def _paged_multi_write(pool, block_tables, pos, vals, active):
+    """Scatter C consecutive tokens' K or V per slot into the pool.
+
+    vals: (B, C, KV, hd) in pool dtype; token ``c`` of slot ``b`` lands
+    at logical position ``pos[b] + c``.  Rows with ``active`` False and
+    positions past the slot's table capacity route to the trash block;
+    positions inside capacity but in never-allocated table entries hit
+    the trash block naturally (unallocated entries point at it).  A
+    speculative chunk therefore only ever writes blocks the slot
+    already owns — and only at positions >= ``pos`` (its own current
+    frontier), so no live KV is overwritten."""
+    b, c = vals.shape[0], vals.shape[1]
+    bsz = pool.shape[1]
+    nb = block_tables.shape[1]
+    lp = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) logical positions
+    blk = jnp.take_along_axis(
+        block_tables, jnp.clip(lp // bsz, 0, nb - 1), axis=1
+    )
+    ok = lp < nb * bsz
+    if active is not None:
+        ok &= active[:, None]
+    blk = jnp.where(ok, blk, TRASH_BLOCK)
+    return pool.at[blk, lp % bsz].set(vals)
+
+
 def attention_block(
     p,
     x,
@@ -535,6 +607,72 @@ def chunk_attention_block(
         g_v = _paged_gather(pool_v, bt_row[None])
         out = attention_dense(q, g_k, g_v, q_off=start, window=cfg.swa_window)
     out = constrain(out, "batch", "seq", "heads", "head_dim")
+    y = dense(
+        p["o_proj"], out.reshape(b, c, nh * hd), name=f"{name}.o",
+        policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),
+    )
+    return y, pool_k, pool_v
+
+
+def verify_attention_block(
+    p, x, cfg, *, policy, rng, pool_k, pool_v, block_tables, pos, name,
+    prepared=None, active=None,
+):
+    """Attention block for one SPECULATIVE VERIFY chunk against the
+    paged pool (serve/batching.py, DESIGN.md §7).
+
+    x: (B, C, d) — per slot, the activations of the last emitted token
+    followed by C-1 draft proposals, at logical positions
+    ``pos[b] .. pos[b]+C-1``.  All C positions' K/V are written into
+    the slot's already-allocated blocks FIRST (inactive lanes and
+    out-of-capacity positions route to the trash block), then each
+    position attends over the gathered logical view under the
+    ``ki <= pos + c`` causal mask.
+
+    Numerics contract: per-position math is identical to
+    :func:`decode_attention_block` — same projections (row/batch-shape
+    invariant), same RoPE positions, same masked-softmax reduction
+    order — so row ``(b, c)`` is BITWISE the value a sequential
+    single-token decode at ``pos + c`` computes over the same accepted
+    prefix; keys at later chunk positions contribute exactly 0.0 after
+    ``exp``.  Rejected draft tails stay dead by this same length mask
+    until the next round overwrites them (``pos`` only ever rewinds to
+    an accepted frontier).  This path has no Pallas kernel yet: it
+    always takes the XLA gather, which the decode kernels are
+    themselves bitwise against (tests/test_paged_attention.py), so
+    backend flips stay invisible.  Returns (y, new_pool_k, new_pool_v).
+    """
+    b, c, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["q_proj"], x, name=f"{name}.q", policy=policy, rng=rng,
+              prepared=pget(prepared, "q_proj"))
+    k = dense(p["k_proj"], x, name=f"{name}.k", policy=policy, rng=rng,
+              prepared=pget(prepared, "k_proj"))
+    v = dense(p["v_proj"], x, name=f"{name}.v", policy=policy, rng=rng,
+              prepared=pget(prepared, "v_proj"))
+    q = _split_heads(q, nh, hd)
+    k = _split_heads(k, nkv, hd)
+    v = _split_heads(v, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    if cfg.rope_theta > 0:
+        positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C)
+        cos, sin = rope(positions, hd, cfg.rope_theta)  # (B, C, half)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    pool_k = _paged_multi_write(
+        pool_k, block_tables, pos, k.astype(pool_k.dtype), active
+    )
+    pool_v = _paged_multi_write(
+        pool_v, block_tables, pos, v.astype(pool_v.dtype), active
+    )
+    att_k = _paged_gather(pool_k, block_tables)
+    att_v = _paged_gather(pool_v, block_tables)
+    out = attention_verify(q, att_k, att_v, pos, window=cfg.swa_window)
     y = dense(
         p["o_proj"], out.reshape(b, c, nh * hd), name=f"{name}.o",
         policy=policy, rng=rng, prepared=pget(prepared, "o_proj"),

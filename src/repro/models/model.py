@@ -38,6 +38,7 @@ from .transformer import (
     block_chunk,
     block_decode,
     block_forward,
+    block_verify,
     group_size,
     init_block_params,
     n_groups,
@@ -48,6 +49,7 @@ __all__ = [
     "init_params",
     "forward",
     "decode_step",
+    "decode_verify_step",
     "prefill_chunk_step",
     "loss_fn",
     "init_cache",
@@ -480,6 +482,86 @@ def decode_step(
         prepared=pget(programmed, "lm_head"),
     ).astype(jnp.float32)
     logits = constrain(logits, "batch", "vocab")
+    return logits, new_cache
+
+
+def decode_verify_step(
+    params,
+    cfg: ArchConfig,
+    cache: dict,
+    tokens: jax.Array,  # (B, C) last emitted token + C-1 draft proposals
+    *,
+    policy: MemPolicy = DIGITAL,
+    rng=None,
+    compute_dtype=jnp.bfloat16,
+    programmed=None,
+    active=None,
+):
+    """Batched multi-token VERIFY forward for speculative decoding
+    (DESIGN.md §7).
+
+    Runs every slot's C candidate tokens through the layer stack in ONE
+    forward and returns per-position logits ``(B, C, V)`` — row
+    ``(b, c)`` is BITWISE the logits a sequential single-token decode
+    would produce at position ``pos[b] + c`` given the same accepted
+    prefix: every layer writes all C positions' K/V into the slot's
+    already-allocated blocks first (inactive lanes route to the trash
+    block), then position ``c`` attends under the ``ki <= pos + c``
+    mask, so later-position keys contribute exactly 0.0 after ``exp``.
+    This is how the programmed target amortises its expensive analog
+    GEMMs over k draft tokens per step: C rows ride through the same
+    weight-stationary matmuls one row would.
+
+    ``cache["pos"]`` is NOT advanced: the caller decides how many
+    candidates the target accepted and commits the new frontier itself
+    (the accept/rollback pos rewind in serve/batching.py) — rejected
+    tails stay dead by the length mask until the next round overwrites
+    them.  Paged cache only (there is no rollback story for a dense
+    per-slot cache's recurrent siblings).
+
+    Layer names and the PRNG fold chain mirror ``decode_step`` exactly,
+    so programmed-state lookup and programming noise agree.
+    """
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    block_tables = cache.get("block_tables")
+    if block_tables is None:
+        raise NotImplementedError(
+            "decode_verify_step requires the paged cache "
+            "(init_paged_cache): accept/rollback is a block-table pos "
+            "rewind"
+        )
+    x = jnp.take(
+        params["embed"]["w"].astype(compute_dtype), tokens, axis=0
+    )  # (B, C, d)
+    pos = cache["pos"]
+    new_cache = {"pos": pos, "block_tables": block_tables, "blocks": {}}
+    prog_blocks = pget(programmed, "blocks")
+    for si, (start, steps, tmpl) in enumerate(segments(cfg)):
+        seg_p = params["blocks"][f"seg{si}"]
+        seg_c = cache["blocks"][f"seg{si}"]
+        prog_seg = pget(prog_blocks, f"seg{si}")
+        rng_s = jax.random.fold_in(rng, si)
+
+        def step(x, inp):
+            p_l, prog_l, c_l, idx = inp
+            rng_l = jax.random.fold_in(rng_s, idx)
+            x, st = block_verify(
+                p_l, x, cfg, tmpl, policy=policy, rng=rng_l, pos=pos,
+                state=c_l, block_tables=block_tables, prepared=prog_l,
+                active=active,
+            )
+            return x, st
+
+        x, new_states = lax.scan(
+            step, x, (seg_p, prog_seg, seg_c, jnp.arange(steps))
+        )
+        new_cache["blocks"][f"seg{si}"] = new_states
+    x = norm(x, params["final_norm"], cfg.norm)
+    logits = dense(
+        params["lm_head"], x, name="lm_head", policy=policy, rng=rng,
+        prepared=pget(programmed, "lm_head"),
+    ).astype(jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
     return logits, new_cache
 
 

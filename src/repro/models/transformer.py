@@ -18,6 +18,7 @@ from .attention import (
     chunk_attention_block,
     decode_attention_block,
     init_attn_params,
+    verify_attention_block,
 )
 from repro.distributed.sharding import constrain
 
@@ -44,6 +45,7 @@ __all__ = [
     "block_forward",
     "block_decode",
     "block_chunk",
+    "block_verify",
     "group_size",
     "n_groups",
 ]
@@ -287,6 +289,41 @@ def block_chunk(p, x, cfg, template_idx, *, policy, rng, state, bt_row,
         pool_k=state["k"], pool_v=state["v"], bt_row=bt_row, start=start,
         n_valid=n_valid, positions=positions, name=name,
         prepared=pget(prepared, "attn"),
+    )
+    x = x + y
+    h = norm(x, p["norm2"], cfg.norm)
+    x = x + _ffn_forward(
+        p, h, cfg, policy=policy, rng=rng, name=name, prepared=prepared
+    )
+    return x, {"k": pk, "v": pv}
+
+
+def block_verify(p, x, cfg, template_idx, *, policy, rng, pos, state,
+                 block_tables, prepared=None, active=None):
+    """One scan step of SPECULATIVE VERIFY (DESIGN.md §7): run the
+    C-token verify chunk ``x`` (B, C, d) — last emitted token + draft
+    proposals per slot — through one attention layer against the paged
+    pool.
+
+    Attention-only, like chunked prefill (rejected drafts cannot be
+    rolled back out of a recurrent carry; the serving loop rejects
+    those families at construction).  Uses the same layer names and the
+    caller's per-layer rng, so programmed-state lookup and
+    programming-noise keys match ``block_decode`` exactly — the per-row
+    bitwise claim of ``verify_attention_block`` then extends through
+    the residual/FFN stack (all row-independent).
+    """
+    kind, _ = cfg.layer_kind(template_idx)
+    if group_size(cfg) != 1 or kind != "attn":
+        raise NotImplementedError(
+            "speculative verify requires homogeneous all-attention layers"
+        )
+    name = f"L.{kind}"
+    h = norm(x, p["norm1"], cfg.norm)
+    y, pk, pv = verify_attention_block(
+        p["attn"], h, cfg, policy=policy, rng=rng,
+        pool_k=state["k"], pool_v=state["v"], block_tables=block_tables,
+        pos=pos, name=name, prepared=pget(prepared, "attn"), active=active,
     )
     x = x + y
     h = norm(x, p["norm2"], cfg.norm)

@@ -21,8 +21,10 @@ from .engine import (
     make_decode_step,
     make_prefill_step,
     make_slot_prefill,
+    make_verify_step,
 )
 from .prefix_cache import AdmitPlan, PrefixCache
+from .sampling import SamplingParams
 
 __all__ = [
     # the serving API
@@ -31,6 +33,7 @@ __all__ = [
     "ServeReport",
     "Request",
     "RequestResult",
+    "SamplingParams",
     "PrefixCache",
     # supporting surface
     "AdmitPlan",
@@ -42,4 +45,5 @@ __all__ = [
     "make_slot_prefill",
     "make_chunk_prefill",
     "make_decode_step",
+    "make_verify_step",
 ]

@@ -67,13 +67,15 @@ from repro.models import program_params
 from repro.models.model import copy_paged_block, init_paged_cache
 
 from .config import ReproDeprecationWarning, ServeConfig
-from .engine import make_chunk_prefill, make_decode_step
+from .engine import make_chunk_prefill, make_decode_step, make_verify_step
 from .prefix_cache import PrefixCache
+from .sampling import SamplingParams, request_keys, sample_row, sample_rows
 
 __all__ = [
     "Request",
     "RequestResult",
     "RequestQueue",
+    "SamplingParams",
     "ServeConfig",
     "ServeLoop",
     "ServeReport",
@@ -103,6 +105,12 @@ class Request:
     ``"interactive"`` requests are admitted ahead of ``"batch"`` ones
     (default) under the weighted, aging-bounded scheduler — priority
     changes WHEN a request is admitted, never what it decodes to.
+    ``sampling`` (a :class:`~repro.serve.sampling.SamplingParams`, or
+    None for greedy) selects stochastic decoding with a PER-REQUEST
+    seed: token ``i`` draws with ``fold_in(PRNGKey(seed), i)`` whatever
+    slot/packing the request lands in, so sampled tokens satisfy the
+    same batched==solo contract greedy tokens do
+    (``greedy_generate(..., sampling=...)`` is the solo oracle).
     """
 
     rid: int
@@ -111,6 +119,7 @@ class Request:
     eos_id: int | None = None
     submit_time: float = 0.0
     priority: str = "batch"  # "interactive" | "batch"
+    sampling: SamplingParams | None = None  # None = greedy
 
 
 @dataclass
@@ -142,6 +151,18 @@ class RequestResult:
     prefill_chunks: int = 0
     priority: str = "batch"
     error: str | None = None  # only when finish_reason == "refused"
+    tokens_drafted: int = 0  # draft proposals the target examined
+    tokens_accepted: int = 0  # of those, accepted (== the target's token)
+
+    @property
+    def acceptance(self) -> float | None:
+        """Per-request draft acceptance rate (speculative decoding):
+        accepted / examined draft proposals, ``None`` when the request
+        never ran a speculative round (spec off, or it finished at its
+        first token)."""
+        if self.tokens_drafted == 0:
+            return None
+        return self.tokens_accepted / self.tokens_drafted
 
     @property
     def latency_s(self) -> float | None:
@@ -240,6 +261,8 @@ class ServeReport:
     aged_admissions: int = 0
     prefill_chunks_run: int = 0
     reprogram_swaps: int = 0
+    tokens_drafted: int = 0
+    tokens_accepted: int = 0
     trace: list | None = None
 
     #: the stable counter surface — ``counters()`` keys, in order.  New
@@ -259,7 +282,23 @@ class ServeReport:
         "aged_admissions",
         "prefill_chunks_run",
         "reprogram_swaps",
+        "tokens_drafted",
+        "tokens_accepted",
     )
+
+    @property
+    def acceptance_rate(self) -> float | None:
+        """Aggregate draft acceptance rate across the run
+        (speculative decoding): ``tokens_accepted / tokens_drafted``,
+        ``None`` when no speculative round ran.  With a greedy draft
+        whose policy equals the target's this is exactly 1.0 — the two
+        engines compute bitwise-identical trajectories — and it decays
+        as crossbar non-idealities (write noise, ADC mode, drift age)
+        pull the target away from the draft (the BENCH
+        ``serve_speculative`` sweep)."""
+        if self.tokens_drafted == 0:
+            return None
+        return self.tokens_accepted / self.tokens_drafted
 
     def counters(self) -> dict:
         """Stable name → int mapping of every scheduler counter
@@ -526,21 +565,126 @@ def _jit_chunk(cfg, policy, compute_dtype, mesh):
 
 
 @lru_cache(maxsize=None)
-def _jit_decode_cached(cfg, policy, compute_dtype, mesh, kernel_state):
+def _jit_decode_cached(cfg, policy, compute_dtype, mesh, kernel_state,
+                       sampled):
     fn = make_decode_step(cfg, policy, compute_dtype=compute_dtype)
 
-    def step(params, cache, tokens, programmed, active, t_now):
-        logits, cache = fn(params, cache, tokens, programmed, active, t_now)
-        return logits, jnp.argmax(logits, axis=-1), cache
+    # ``sampled`` is part of the cache key (like ``kernel_state``): the
+    # two step functions trace DIFFERENT graphs over the same leading
+    # arguments, so a loop flipped from greedy to sampled (or back)
+    # between constructions must never reuse the other mode's trace.
+    if sampled:
+        def step(params, cache, tokens, programmed, active, t_now,
+                 keys, temps, top_ks, top_ps):
+            logits, cache = fn(
+                params, cache, tokens, programmed, active, t_now
+            )
+            toks = sample_rows(keys, logits, temps, top_ks, top_ps)
+            return logits, toks, cache
+    else:
+        def step(params, cache, tokens, programmed, active, t_now):
+            logits, cache = fn(
+                params, cache, tokens, programmed, active, t_now
+            )
+            return logits, jnp.argmax(logits, axis=-1), cache
 
     # donate the arena: each step's KV writes alias the previous buffer
     return jax.jit(step, donate_argnums=(1,))
 
 
-def _jit_decode(cfg, policy, compute_dtype, mesh):
+def _jit_decode(cfg, policy, compute_dtype, mesh, sampled=False):
     return _jit_decode_cached(
-        cfg, policy, compute_dtype, mesh, _kernel_state()
+        cfg, policy, compute_dtype, mesh, _kernel_state(), bool(sampled)
     )
+
+
+@lru_cache(maxsize=None)
+def _jit_spec_round_cached(cfg, policy, draft_policy, compute_dtype,
+                           mesh, kernel_state, n_draft):
+    """One FUSED speculative round: frontier commit on both caches,
+    the scanned draft chain, and the target's batched multi-token
+    verify — a single dispatch per round where a staged version pays
+    four plus two host round-trips (the draft tokens never leave the
+    device between proposal and verification)."""
+    draft_fn = make_decode_step(
+        cfg, draft_policy, compute_dtype=compute_dtype
+    )
+    verify_fn = make_verify_step(cfg, policy, compute_dtype=compute_dtype)
+
+    def round_(params, cache, draft_cache, tokens, pos_t, pos_d,
+               programmed, draft_programmed, active, t_now,
+               keys_d, keys_v, temps, top_ks, top_ps):
+        """tokens (K,): last emitted token per slot.  pos_t/pos_d (K,):
+        the accepted frontier from the previous round (accept =
+        advance past the matched drafts, rollback = rewind over the
+        rejected tail) — pure bookkeeping: rejected positions' KV
+        stays in the arena but is dead by the ``ki <= pos`` length
+        mask until this round's writes re-cover it.  keys_d
+        (n_draft, K, 2) / keys_v (K, C, 2): draft step j and verify
+        column j draw emission index e0+j of their slot with the SAME
+        key on (numerically different) logits — a matching draw is
+        exactly an accepted draft.  Returns per-position target logits
+        (K, C, V), the token the TARGET emits at each position —
+        sampled with exactly the keys the non-speculative path would
+        use, so the accept rule (draft == target token) preserves the
+        trajectory token for token — the proposed token matrix
+        tokens_c (K, C), and both caches (target pos NOT advanced)."""
+        cache = {**cache, "pos": pos_t}
+        draft_cache = {**draft_cache, "pos": pos_d}
+
+        def step(carry, step_keys):
+            dcache, toks = carry
+            logits, dcache = draft_fn(
+                params, dcache, toks, draft_programmed, active, t_now
+            )
+            toks = sample_rows(step_keys, logits, temps, top_ks, top_ps)
+            return (dcache, toks), toks
+
+        (draft_cache, last), drafts = lax.scan(
+            step, (draft_cache, tokens), keys_d
+        )
+        # one extra draft decode feeding the LAST proposal so its KV
+        # lands in the draft cache too: a fully-accepted round advances
+        # the frontier one past the scan's last write, and without this
+        # the next round's draft attention would read a never-written
+        # position (stale KV → spurious rejections).  Logits discarded.
+        _, draft_cache = draft_fn(
+            params, draft_cache, last, draft_programmed, active, t_now
+        )
+        # column 0 = the last emitted token, columns 1..n_draft = the
+        # draft chain; column c's verify logits are the target's
+        # logits for emission index e0+c
+        tokens_c = jnp.concatenate(
+            [tokens[:, None], jnp.moveaxis(drafts, 0, 1)], axis=1
+        )
+        k_sl, c = tokens_c.shape
+        logits, cache = verify_fn(
+            params, cache, tokens_c, programmed, active, t_now
+        )
+        bc = lambda a: jnp.broadcast_to(a[:, None], (k_sl, c)).reshape(-1)
+        toks = sample_rows(
+            keys_v.reshape(k_sl * c, -1), logits.reshape(k_sl * c, -1),
+            bc(temps), bc(top_ks), bc(top_ps),
+        ).reshape(k_sl, c)
+        return logits, toks, tokens_c, cache, draft_cache
+
+    return jax.jit(round_, donate_argnums=(1, 2))
+
+
+def _jit_spec_round(cfg, policy, draft_policy, compute_dtype, mesh,
+                    n_draft):
+    return _jit_spec_round_cached(
+        cfg, policy, draft_policy, compute_dtype, mesh, _kernel_state(),
+        int(n_draft),
+    )
+
+
+@lru_cache(maxsize=None)
+def _jit_sample1():
+    """Single-row sampler for the first token (prefill logits): the
+    same ``sample_row`` the batched steps vmap, so the draw is bitwise
+    the solo oracle's."""
+    return jax.jit(sample_row)
 
 
 @lru_cache(maxsize=None)
@@ -604,6 +748,20 @@ class _SlotState:
     decode_steps: int = 0
     prefill_chunks: int = 0
     finish_reason: str | None = None
+    # sampling: keys[i] is the per-request key of emission index i (a
+    # pure function of the request's seed — slot, packing, and mesh
+    # never enter it, the batched==solo anchor for sampled tokens);
+    # temp == 0.0 rows collapse to exact argmax inside sample_row
+    keys: np.ndarray | None = None
+    temp: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    # speculative decoding: the draft engine's prefill frontier on its
+    # own paged cache, plus the per-request acceptance counters
+    # (drafts EXAMINED by the accept rule / drafts that matched)
+    draft_pos: int = 0
+    tokens_drafted: int = 0
+    tokens_accepted: int = 0
 
     @property
     def blocks(self) -> list:
@@ -744,6 +902,28 @@ class ServeLoop:
                     "Use adc_mode='dynamic_row' (per-read ranging) or "
                     "'fullscale', or pass allow_coupled_numerics=True."
                 )
+        # --- speculative decoding (DESIGN.md §7): the draft engine is
+        # folded from the SAME params under its own (usually cheaper)
+        # policy; it proposes spec_k tokens per slot per round and the
+        # programmed target verifies them in one batched multi-token
+        # forward, so speculation changes throughput, never output
+        self.spec_k = int(config.spec_k)
+        self.draft_policy = config.draft_policy or MemPolicy(default=None)
+        if self.spec_k and not allow_coupled_numerics:
+            coupled = [
+                pat
+                for pat, c in (("default", self.draft_policy.default),)
+                + tuple(self.draft_policy.overrides)
+                if c is not None and not c.row_independent
+            ]
+            if coupled:
+                raise ValueError(
+                    "draft_policy couples batch rows through the ADC "
+                    f"range (faithful adc_mode='dynamic' at {coupled}): "
+                    "draft proposals (hence acceptance) would depend on "
+                    "slot neighbours.  Use adc_mode='dynamic_row' or "
+                    "'fullscale', or pass allow_coupled_numerics=True."
+                )
         self.params = params
         self.cfg = cfg
         self.slots = int(slots)
@@ -788,11 +968,34 @@ class ServeLoop:
                     params, cfg, self.policy, jax.random.PRNGKey(0),
                     mesh=mesh,
                 )
+            # the draft's programmed state is pinned at generation 0 —
+            # drafts only steer throughput, so the refresh machinery
+            # never re-programs the draft (acceptance may sag as the
+            # TARGET ages/refreshes; that is the measured quantity)
+            draft_programmed = None
+            if (
+                self.spec_k
+                and weight_stationary
+                and self.draft_policy.enabled
+            ):
+                draft_programmed = program_params(
+                    params, cfg, self.draft_policy, jax.random.PRNGKey(0),
+                    mesh=mesh,
+                )
         self.programmed = programmed
+        self.draft_programmed = draft_programmed
         self._chunk = _jit_chunk(cfg, self.policy, compute_dtype, mesh)
         self._decode = _jit_decode(cfg, self.policy, compute_dtype, mesh)
         self._admit = _jit_admit()
         self._copy = _jit_copy()
+        if self.spec_k:
+            self._draft_chunk = _jit_chunk(
+                cfg, self.draft_policy, compute_dtype, mesh
+            )
+            self._spec_round = _jit_spec_round(
+                cfg, self.policy, self.draft_policy, compute_dtype,
+                mesh, self.spec_k,
+            )
         # host-side refcounted block allocator (block 0 = trash, never
         # handed out); prefix_cache=False degrades it to the plain
         # free list with identical allocation order
@@ -827,6 +1030,14 @@ class ServeLoop:
             for _, c in (("default", self.policy.default),)
             + tuple(self.policy.overrides)
         )
+        if self.spec_k:
+            # a drifting DRAFT also needs the per-iteration clock (its
+            # proposals age even while the target stays drift-free)
+            self._drift_on = self._drift_on or any(
+                c is not None and c.drift is not None
+                for _, c in (("default", self.draft_policy.default),)
+                + tuple(self.draft_policy.overrides)
+            )
 
     # -- block allocator ----------------------------------------------------
 
@@ -908,6 +1119,8 @@ class ServeLoop:
             cached_prompt_tokens=st.plan.cached_len,
             prefill_chunks=st.prefill_chunks,
             priority=st.request.priority,
+            tokens_drafted=st.tokens_drafted,
+            tokens_accepted=st.tokens_accepted,
         )
 
     def _refused_result(self, r: Request, msg: str) -> RequestResult:
@@ -981,9 +1194,38 @@ class ServeLoop:
             self.cfg, K, self.max_len, self.block_size, self.kv_blocks,
             self.cache_dtype,
         )
+        # per-RUN mode selection: the sampled and greedy step functions
+        # are distinct lru-cached jits (``sampled`` is in the cache
+        # key), so an all-greedy run keeps the exact pre-sampling trace
+        # and back-to-back runs that flip modes never share a trace
+        run_sampled = any(r.sampling is not None for r in requests)
+        decode = (
+            _jit_decode(
+                self.cfg, self.policy, self.compute_dtype, self.mesh,
+                sampled=True,
+            )
+            if run_sampled else self._decode
+        )
+        spec = self.spec_k > 0
+        C = self.spec_k + 1
+        draft_cache = None
+        if spec:
+            # the draft's own arena: statically partitioned (slot k owns
+            # blocks 1+k*nbps .. 1+(k+1)*nbps-1; block 0 stays trash) —
+            # no prefix cache, no allocator, nothing to leak
+            draft_cache = init_paged_cache(
+                self.cfg, K, self.max_len, self.block_size,
+                K * self.blocks_per_slot + 1, self.cache_dtype,
+            )
         slot_state: list[_SlotState | None] = [None] * K
         next_tok = np.zeros((K,), np.int32)
         active = np.zeros((K,), bool)
+        # per-slot sampling surface of the CURRENT occupant (temp 0.0 =
+        # exact argmax inside sample_row, so greedy requests mixed into
+        # a sampled batch stay greedy)
+        slot_temp = np.zeros((K,), np.float32)
+        slot_topk = np.zeros((K,), np.int32)
+        slot_topp = np.ones((K,), np.float32)
         results: dict[int, RequestResult] = {}
         total_chunks = 0
         swaps = 0
@@ -1079,6 +1321,18 @@ class ServeLoop:
                     cache = self._copy(
                         cache, jnp.int32(src), jnp.int32(dst)
                     )
+                sp = r.sampling
+                n_keys = r.max_new_tokens + self.spec_k + 1
+                if sp is not None and sp.temperature > 0:
+                    keys = np.asarray(request_keys(sp.seed, n_keys))
+                    temp = float(sp.temperature)
+                    tk, tp = int(sp.top_k), float(sp.top_p)
+                else:
+                    # greedy (or temperature=0 sampling, the same
+                    # thing): keys never reach a draw
+                    keys = np.zeros((n_keys, 2), np.uint32)
+                    temp, tk, tp = 0.0, 0, 1.0
+                slot_temp[k], slot_topk[k], slot_topp[k] = temp, tk, tp
                 slot_state[k] = _SlotState(
                     request=r,
                     admit_time=now(),
@@ -1089,45 +1343,113 @@ class ServeLoop:
                     gen=self.generation,
                     prefill_pos=plan.resume_pos,
                     logits=[] if self.collect_logits else None,
+                    keys=keys,
+                    temp=temp,
+                    top_k=tk,
+                    top_p=tp,
                 )
                 active[k] = False
+                if spec:
+                    # bind the draft lane to its static block range and
+                    # reset its pos; the draft prefills the FULL prompt
+                    # from 0 (its arena shares nothing with the target's
+                    # prefix cache)
+                    draft_bt = np.arange(
+                        1 + k * self.blocks_per_slot,
+                        1 + (k + 1) * self.blocks_per_slot,
+                        dtype=np.int32,
+                    )
+                    draft_cache = self._admit(
+                        draft_cache, jnp.int32(k), jnp.asarray(draft_bt)
+                    )
 
             # 2. one prefill chunk per still-prefilling lane — admission
-            # work is spread so it never stalls the decode step below
+            # work is spread so it never stalls the decode step below.
+            # With speculation each lane ALSO advances its draft-engine
+            # prefill by one chunk per iteration (own cache, full
+            # prompt); the lane only starts decoding once both engines
+            # hold the prompt, but the first token always comes from the
+            # target's final chunk.
             chunks_run = 0
+            draft_chunks = 0
             for k in range(K):
                 st = slot_state[k]
                 if st is None or active[k]:
                     continue
                 r = st.request
                 plen = len(r.tokens)
-                start = st.prefill_pos
-                # a cached prefix shrinks the remaining prompt — the
-                # unchunked bucket covers only what is left to run
-                clen = self.prefill_chunk or self._bucket_for(plen - start)
-                nv = min(clen, plen - start)
-                toks = np.zeros((clen,), np.int32)
-                toks[:nv] = np.asarray(r.tokens[start:start + nv], np.int32)
-                logits, cache = self._chunk(
-                    self.params, cache, jnp.asarray(toks), jnp.int32(k),
-                    jnp.int32(start), jnp.int32(nv),
-                    jnp.bool_(start + nv >= plen), st.programmed, t_arg,
-                )
-                st.prefill_pos = start + nv
-                st.prefill_chunks += 1
-                chunks_run += 1
-                self._blocks.register_progress(st.plan, st.prefill_pos)
-                if st.prefill_pos >= plen:  # final chunk → first token
-                    t_first = int(jnp.argmax(logits[0]))
-                    st.first_token_time = now()
-                    generated += 1
-                    if self._emit(st, t_first, logits[0]):
-                        results[r.rid] = self._result(st, now())
-                        self._blocks.release(st.plan)
-                        slot_state[k] = None
-                    else:
+                if st.prefill_pos < plen:
+                    start = st.prefill_pos
+                    # a cached prefix shrinks the remaining prompt — the
+                    # unchunked bucket covers only what is left to run
+                    clen = (
+                        self.prefill_chunk
+                        or self._bucket_for(plen - start)
+                    )
+                    nv = min(clen, plen - start)
+                    toks = np.zeros((clen,), np.int32)
+                    toks[:nv] = np.asarray(
+                        r.tokens[start:start + nv], np.int32
+                    )
+                    logits, cache = self._chunk(
+                        self.params, cache, jnp.asarray(toks),
+                        jnp.int32(k), jnp.int32(start), jnp.int32(nv),
+                        jnp.bool_(start + nv >= plen), st.programmed,
+                        t_arg,
+                    )
+                    st.prefill_pos = start + nv
+                    st.prefill_chunks += 1
+                    chunks_run += 1
+                    self._blocks.register_progress(st.plan, st.prefill_pos)
+                    if st.prefill_pos >= plen:  # final chunk → 1st token
+                        if st.temp > 0:
+                            # emission index 0 draws with keys[0] — the
+                            # same single-row sampler the solo oracle
+                            # vmaps, so the draw is bitwise theirs
+                            t_first = int(
+                                _jit_sample1()(
+                                    jnp.asarray(st.keys[0]), logits[0],
+                                    st.temp, st.top_k, st.top_p,
+                                )
+                            )
+                        else:
+                            t_first = int(jnp.argmax(logits[0]))
+                        st.first_token_time = now()
+                        generated += 1
+                        if self._emit(st, t_first, logits[0]):
+                            results[r.rid] = self._result(st, now())
+                            self._blocks.release(st.plan)
+                            slot_state[k] = None
+                            continue
                         next_tok[k] = t_first
-                        active[k] = True
+                if spec and st.draft_pos < plen:
+                    start = st.draft_pos
+                    clen = (
+                        self.prefill_chunk
+                        or self._bucket_for(plen - start)
+                    )
+                    nv = min(clen, plen - start)
+                    toks = np.zeros((clen,), np.int32)
+                    toks[:nv] = np.asarray(
+                        r.tokens[start:start + nv], np.int32
+                    )
+                    # final=False: the draft never needs prefill logits
+                    # (its first proposal samples AFTER consuming the
+                    # target's first token), so the vocab projection is
+                    # skipped while pos still advances to plen
+                    _, draft_cache = self._draft_chunk(
+                        self.params, draft_cache, jnp.asarray(toks),
+                        jnp.int32(k), jnp.int32(start), jnp.int32(nv),
+                        jnp.bool_(False), self.draft_programmed, t_arg,
+                    )
+                    st.draft_pos = start + nv
+                    draft_chunks += 1
+                if (
+                    st.prefill_pos >= plen
+                    and (not spec or st.draft_pos >= plen)
+                    and st.out
+                ):
+                    active[k] = True
 
             # 3. slot-parallel decode over the active lanes — one jitted
             # call per LIVE GENERATION (normally exactly one; during a
@@ -1135,12 +1457,26 @@ class ServeLoop:
             # the new, with complementary active masks — inactive lanes
             # write only the trash block, so the calls compose)
             decoded = int(active.sum())
-            if decoded:
+            if decoded and not spec:
                 gens = sorted(
                     {slot_state[k].gen for k in range(K) if active[k]}
                 )
                 toks_np = np.zeros((K,), np.int32)
                 logits_np = None
+                extra = ()
+                if run_sampled:
+                    # emission index of the token this step draws =
+                    # len(out); the key is a pure function of (seed,
+                    # index), so the packing never enters the draw
+                    keys_now = np.zeros((K, 2), np.uint32)
+                    for k in range(K):
+                        if active[k]:
+                            st = slot_state[k]
+                            keys_now[k] = st.keys[len(st.out)]
+                    extra = (
+                        jnp.asarray(keys_now), jnp.asarray(slot_temp),
+                        jnp.asarray(slot_topk), jnp.asarray(slot_topp),
+                    )
                 for g in gens:
                     mask = np.array(
                         [
@@ -1153,9 +1489,9 @@ class ServeLoop:
                         for k in range(K)
                         if mask[k]
                     )
-                    logits, toks, cache = self._decode(
+                    logits, toks, cache = decode(
                         self.params, cache, jnp.asarray(next_tok),
-                        prog, jnp.asarray(mask), t_arg,
+                        prog, jnp.asarray(mask), t_arg, *extra,
                     )
                     decode_steps += 1
                     occupancy += int(mask.sum())
@@ -1180,6 +1516,116 @@ class ServeLoop:
                         active[k] = False
                     else:
                         next_tok[k] = t
+            elif decoded:
+                # speculative round, one per live generation: draft
+                # proposes spec_k tokens on its own cache, the target
+                # verifies all C = spec_k+1 positions in ONE batched
+                # multi-token forward, and the host accepts the longest
+                # prefix of drafts that match what the target itself
+                # emits — so the emitted tokens are EXACTLY the
+                # non-speculative trajectory and only throughput moves
+                gens = sorted(
+                    {slot_state[k].gen for k in range(K) if active[k]}
+                )
+                temps = jnp.asarray(slot_temp)
+                tks_a = jnp.asarray(slot_topk)
+                tps_a = jnp.asarray(slot_topp)
+                for g in gens:
+                    mask = np.array(
+                        [
+                            bool(active[k]) and slot_state[k].gen == g
+                            for k in range(K)
+                        ]
+                    )
+                    prog = next(
+                        slot_state[k].programmed
+                        for k in range(K)
+                        if mask[k]
+                    )
+                    # keys: draft step j and verify column c both draw
+                    # emission index e0+j / e0+c of their slot — the
+                    # SAME key on (numerically different) logits; a
+                    # matching draw is exactly an accepted draft
+                    keys_d = np.zeros((self.spec_k, K, 2), np.uint32)
+                    keys_v = np.zeros((K, C, 2), np.uint32)
+                    for k in range(K):
+                        if not mask[k]:
+                            continue
+                        st = slot_state[k]
+                        e0 = len(st.out)
+                        keys_d[:, k] = st.keys[e0:e0 + self.spec_k]
+                        keys_v[k] = st.keys[e0:e0 + C]
+                    # the accepted frontier going INTO this round, for
+                    # every slot (a previous round's draft scan left
+                    # pos past it; verify never advances it): active =
+                    # one past the last emitted token's KV, prefilling
+                    # = the chunk frontier, free = parked at 0
+                    pos_t = np.zeros((K,), np.int32)
+                    pos_d = np.zeros((K,), np.int32)
+                    for k in range(K):
+                        st = slot_state[k]
+                        if st is None:
+                            continue
+                        if active[k]:
+                            pos_t[k] = (
+                                len(st.request.tokens) + len(st.out) - 1
+                            )
+                            pos_d[k] = pos_t[k]
+                        else:
+                            pos_t[k] = st.prefill_pos
+                            pos_d[k] = st.draft_pos
+                    logits, toks_v, tokens_c, cache, draft_cache = (
+                        self._spec_round(
+                            self.params, cache, draft_cache,
+                            jnp.asarray(next_tok), jnp.asarray(pos_t),
+                            jnp.asarray(pos_d), prog,
+                            self.draft_programmed, jnp.asarray(mask),
+                            t_arg, jnp.asarray(keys_d),
+                            jnp.asarray(keys_v), temps, tks_a, tps_a,
+                        )
+                    )
+                    decode_steps += 1
+                    occupancy += int(mask.sum())
+                    toks_v_np = np.asarray(toks_v)
+                    tokens_c = np.asarray(tokens_c)
+                    l_np = (
+                        np.asarray(logits) if self.collect_logits
+                        else None
+                    )
+                    for k in range(K):
+                        if not mask[k]:
+                            continue
+                        st = slot_state[k]
+                        st.decode_steps += 1
+                        fin = False
+                        for c in range(C):
+                            # the target's token at this position is
+                            # ALWAYS what gets emitted (greedy argmax or
+                            # the per-emission-key draw on the target's
+                            # logits): acceptance only decides how many
+                            # columns of this round are usable
+                            tok_t = int(toks_v_np[k, c])
+                            row = l_np[k, c] if l_np is not None else None
+                            generated += 1
+                            fin = self._emit(st, tok_t, row)
+                            if fin or c == C - 1:
+                                break
+                            # the draft for the NEXT column is examined:
+                            # column c+1's logits are valid iff its
+                            # input token (the draft) equals tok_t
+                            st.tokens_drafted += 1
+                            if int(tokens_c[k, c + 1]) != tok_t:
+                                break
+                            st.tokens_accepted += 1
+                        if fin:
+                            results[st.request.rid] = self._result(
+                                st, now()
+                            )
+                            self._blocks.release(st.plan)
+                            slot_state[k] = None
+                            active[k] = False
+                        else:
+                            next_tok[k] = int(st.out[-1])
             total_chunks += chunks_run
             # trace every iteration — including idle deferral re-checks
             # below, so sum(t["deferred"]) == report.admission_deferrals
@@ -1190,7 +1636,7 @@ class ServeLoop:
                     "admitted": admitted_now,
                     "deferred": queue.deferrals - def_before,
                 })
-            if decoded == 0 and chunks_run == 0:
+            if decoded == 0 and chunks_run == 0 and draft_chunks == 0:
                 if len(results) == len(requests):
                     break
                 if queue.has_ready(now()):
@@ -1224,5 +1670,7 @@ class ServeLoop:
             aged_admissions=queue.aged_admissions,
             prefill_chunks_run=total_chunks,
             reprogram_swaps=swaps,
+            tokens_drafted=sum(res.tokens_drafted for res in ordered),
+            tokens_accepted=sum(res.tokens_accepted for res in ordered),
             trace=trace,
         )

@@ -89,6 +89,21 @@ class ServeConfig:
         drift aging and the refresh schedule.  None = wall time relative
         to ``run()`` start.  Tests inject a deterministic fake clock
         here; latency metrics always use the real wall clock regardless.
+
+    Speculative decoding (DESIGN.md §7):
+      spec_k: draft tokens proposed per slot per round (0 = speculation
+        off, plain one-token decode).  Each round the draft engine
+        proposes ``spec_k`` tokens and the programmed target verifies
+        them in ONE batched multi-token forward; the emitted tokens are
+        exactly the non-speculative trajectory (a draft token is
+        accepted iff it equals the token the target itself emits at
+        that position), so speculation changes throughput, never
+        output.
+      draft_policy: MemPolicy of the draft engine, folded from the SAME
+        params (None = fully digital — the cheap draft).  A
+        ``mem_fast`` draft models draft-on-crossbar deployments; the
+        closer the draft's numerics to the target's, the higher the
+        acceptance rate.
     """
 
     policy: MemPolicy | None = None
@@ -109,6 +124,8 @@ class ServeConfig:
     max_queue_skip: int = 8
     refresh_every: float | None = None
     clock: Callable[[], float] | None = None
+    spec_k: int = 0
+    draft_policy: MemPolicy | None = None
 
     def __post_init__(self):
         # every geometry knob is validated HERE, eagerly: a bad value
@@ -148,6 +165,22 @@ class ServeConfig:
             )
         if self.refresh_every is not None and self.refresh_every <= 0:
             raise ValueError("refresh_every must be > 0 seconds (or None)")
+        if self.spec_k < 0:
+            raise ValueError(
+                f"spec_k must be >= 0 (got {self.spec_k}); 0 disables "
+                "speculative decoding"
+            )
+        if self.spec_k >= self.max_len:
+            raise ValueError(
+                f"spec_k ({self.spec_k}) must be < max_len "
+                f"({self.max_len}): a verify chunk cannot exceed the "
+                "per-slot KV budget"
+            )
+        if self.draft_policy is not None and self.spec_k == 0:
+            raise ValueError(
+                "draft_policy without spec_k > 0 does nothing: set "
+                "spec_k to enable speculative decoding"
+            )
         if self.buckets is not None:
             buckets = tuple(self.buckets)
             if not buckets:

@@ -35,6 +35,7 @@ from repro.core.drift import drift_clock
 from repro.core.layers import MemPolicy
 from repro.distributed.sharding import rules_context
 from repro.models import decode_step as model_decode
+from repro.models import decode_verify_step as model_verify
 from repro.models import forward, program_params
 from repro.models.config import ArchConfig
 from repro.models.model import (
@@ -44,11 +45,14 @@ from repro.models.model import (
     segments,
 )
 
+from .sampling import request_keys, sample_row
+
 __all__ = [
     "make_prefill_step",
     "make_slot_prefill",
     "make_chunk_prefill",
     "make_decode_step",
+    "make_verify_step",
     "greedy_generate",
 ]
 
@@ -278,6 +282,39 @@ def make_decode_step(
     return decode_fn
 
 
+def make_verify_step(
+    cfg: ArchConfig,
+    policy: MemPolicy | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+):
+    """Speculative-verification step over the paged cache (DESIGN.md §7).
+
+    The returned function consumes ``tokens`` (B, C) — per slot, the
+    last emitted token followed by C-1 draft proposals — and returns
+    per-position logits (B, C, V) plus the cache with all C positions'
+    K/V written but ``pos`` NOT advanced: the caller commits the
+    accepted frontier itself (accept/rollback, serve/batching.py).  Row
+    ``(b, c)`` is bitwise the logits a sequential decode would produce
+    at ``pos + c`` given the same accepted prefix
+    (:func:`repro.models.decode_verify_step`), so verification amortises
+    the expensive programmed engine over C rows without changing one
+    emitted token."""
+    policy = policy or DIGITAL
+    rng = jax.random.PRNGKey(0)
+
+    def verify_fn(params, cache, tokens, programmed=None, active=None,
+                  t_now=None):
+        with drift_clock(t_now):
+            return model_verify(
+                params, cfg, cache, tokens, policy=policy, rng=rng,
+                compute_dtype=compute_dtype, programmed=programmed,
+                active=active,
+            )
+
+    return verify_fn
+
+
 def greedy_generate(
     params,
     cfg: ArchConfig,
@@ -293,6 +330,7 @@ def greedy_generate(
     jit_steps: bool = True,
     mesh=None,
     t_now=None,
+    sampling=None,
 ):
     """Batched greedy decoding driver (example / integration tests).
 
@@ -311,6 +349,14 @@ def greedy_generate(
     time threaded to every prefill/decode step — with a drift-enabled
     policy the generation reads the programmed state as aged to
     ``t_now``; None (default) disables drift evaluation entirely.
+
+    ``sampling`` (a :class:`repro.serve.sampling.SamplingParams`,
+    optional) replaces the argmax pick with the per-request-seeded
+    sampler: token ``i`` is drawn with ``fold_in(PRNGKey(seed), i)`` on
+    the unchanged logits — the SOLO oracle of the sampled batched==solo
+    contract (every batch row draws with the same key, so rows are
+    replicas of the same request).  ``sampling=None`` keeps the exact
+    greedy behaviour; ``temperature=0`` sampling equals it bitwise.
     """
     if t_now is not None:
         t_now = jnp.asarray(t_now, jnp.float32)
@@ -340,12 +386,26 @@ def greedy_generate(
             # donate the cache: each token's KV update aliases the previous
             # buffer instead of allocating a fresh max_len-sized cache
             decode = jax.jit(decode, donate_argnums=(1,))
+        if sampling is None:
+            pick = lambda logits, i: jnp.argmax(logits, axis=-1)
+        else:
+            # every row draws with the request's key for emission i —
+            # a pure function of (seed, i), exactly the keys the
+            # ServeLoop uses for this request in any slot/packing
+            keys = request_keys(sampling.seed, n_steps + 1)
+            samp = jax.vmap(sample_row, in_axes=(None, 0, None, None, None))
+            if jit_steps:
+                samp = jax.jit(samp)
+            temp = jnp.float32(sampling.temperature)
+            tk = jnp.int32(sampling.top_k)
+            tp = jnp.float32(sampling.top_p)
+            pick = lambda logits, i: samp(keys[i], logits, temp, tk, tp)
         logits, cache = prefill(params, batch, programmed, t_now)
         out = []
-        tok = jnp.argmax(logits, axis=-1)
-        for _ in range(n_steps):
+        tok = pick(logits, 0)
+        for i in range(n_steps):
             out.append(tok)
             logits, cache = decode(params, cache, tok, programmed, None, t_now)
-            tok = jnp.argmax(logits, axis=-1)
+            tok = pick(logits, i + 1)
         out.append(tok)
     return jnp.stack(out, axis=1)

@@ -1,0 +1,122 @@
+"""Stochastic sampling for the serving engine (DESIGN.md §7).
+
+Greedy-only serving is a demo, not a product: this module adds
+temperature / top-k / top-p sampling with **per-request** seeds, designed
+so the batched==solo contract extends from greedy tokens to sampled
+tokens:
+
+* **Keys depend only on (seed, emission index)** — never on the slot a
+  request landed in, the packing around it, or the mesh.  The key for a
+  request's ``i``-th emitted token is ``fold_in(PRNGKey(seed), i)``;
+  with ``jax_threefry_partitionable`` enabled (repro.core.device, PR 3)
+  the draw itself is sharding-invariant, so the same request produces
+  identical tokens across slot counts, packings, and meshed/unmeshed
+  runs.
+* **Sampling is row-local.**  ``sample_row`` consumes one ``(V,)`` logit
+  row; the batched form is a plain ``vmap`` — no reduction ever couples
+  rows, so a neighbour's logits can never perturb a request's draw.
+* **temperature == 0 collapses exactly to the greedy path**: the
+  returned token is ``jnp.argmax(logits)`` — bitwise the token the
+  greedy decode step picks — and the key is ignored.
+
+The masking rules are the standard ones: ``top_k=0`` and ``top_p=1.0``
+disable their filters; ties at the k-th logit all survive (the usual
+threshold semantics).  Filters compose top-k first, then top-p over the
+temperature-scaled survivors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "GREEDY", "request_keys", "sample_row",
+           "sample_rows"]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (attach to :class:`~repro.serve.batching.Request`).
+
+    temperature: softmax temperature; ``0.0`` is EXACTLY greedy (argmax,
+      key unused) — the degenerate case tests pin bitwise.
+    top_k: keep the k largest logits before sampling (0 = disabled;
+      ties at the k-th value all survive).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+      distribution whose cumulative probability covers ``top_p``
+      (1.0 = disabled).
+    seed: the per-request PRNG seed.  Token ``i`` of the request is
+      drawn with ``fold_in(PRNGKey(seed), i)`` wherever the request
+      runs — the batched==solo sampling contract.
+    """
+
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0 (got {self.temperature}); "
+                "0 collapses to greedy"
+            )
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (got {self.top_k}); "
+                             "0 disables the filter")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1] (got {self.top_p}); 1.0 "
+                "disables the filter"
+            )
+
+
+#: the greedy degenerate case: argmax, key ignored
+GREEDY = SamplingParams(temperature=0.0)
+
+
+def request_keys(seed: int, n: int):
+    """Keys for a request's first ``n`` emissions: ``(n, 2)`` uint32,
+    row ``i`` = ``fold_in(PRNGKey(seed), i)``.  A pure function of
+    (seed, emission index) — by construction independent of slot,
+    packing, and mesh, which is the whole batched==solo argument for
+    sampled tokens."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(n))
+
+
+def sample_row(key, logits, temperature, top_k, top_p):
+    """Sample ONE token from one ``(V,)`` logit row.
+
+    All filters are row-local (sort / cumsum over the vocab axis only),
+    so a vmap over rows is independent per row.  ``temperature == 0``
+    returns ``argmax(logits)`` exactly — the same f32 argmax the greedy
+    decode step computes — via a ``where`` select, so one trace serves
+    both modes and a greedy request inside a sampled batch stays
+    bitwise on the greedy path."""
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1)
+    v = logits.shape[-1]
+    desc = jnp.sort(logits)[::-1]
+    # top-k: threshold at the k-th largest value (0 disables; ties keep)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    kth = desc[jnp.clip(k_eff - 1, 0, v - 1)]
+    masked = jnp.where(logits >= kth, logits, -jnp.inf)
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    scaled = masked / safe_t
+    # top-p over the temperature-scaled survivors: index i of the sorted
+    # distribution survives iff the cumulative mass BEFORE it is < top_p
+    # (the first index always survives, so the draw is never empty)
+    srt = jnp.sort(scaled)[::-1]
+    probs = jax.nn.softmax(srt)
+    csum = jnp.cumsum(probs)
+    keep = (csum - probs) < top_p
+    cutoff = jnp.min(jnp.where(keep, srt, jnp.inf))
+    scaled = jnp.where(scaled >= cutoff, scaled, -jnp.inf)
+    sampled = jax.random.categorical(key, scaled)
+    return jnp.where(temperature > 0, sampled, greedy_tok).astype(jnp.int32)
+
+
+#: batched row sampler: keys (B, 2), logits (B, V), knobs (B,) → (B,)
+sample_rows = jax.vmap(sample_row)

@@ -19,6 +19,12 @@ Properties (fast engine — bitwise row-independent by construction):
   tokens equal solo ``greedy_generate`` on its prompt, and the recorded
   scheduler trace shows no request overtaken by more than
   ``max_queue_skip`` later-submitted requests (DESIGN.md §7).
+* **Sampling is slot-blind**: for ANY mix of sampled and greedy
+  requests (random temperatures / top-k / top-p / per-request seeds),
+  any packing, arrival order, and priority assignment, every request's
+  tokens equal solo ``greedy_generate(sampling=...)`` with the same
+  seed — the per-emission keys are a pure function of (seed, emission
+  index), so neighbours never enter a draw (DESIGN.md §7).
 
 When ``hypothesis`` is installed the properties are checked over random
 workloads; otherwise a deterministic grid of representative workloads
@@ -44,6 +50,7 @@ from repro.models import init_params, program_params
 from repro.serve import (
     PrefixCache,
     Request,
+    SamplingParams,
     ServeConfig,
     ServeLoop,
     greedy_generate,
@@ -252,6 +259,56 @@ def check_scheduler_solo_tokens_and_aging_bound(
         assert admitted == [r.rid for r in reqs], "FIFO mode reordered"
 
 
+def check_sampled_mix_equals_solo(seed, n_requests, slots, spec_k=0):
+    """Any mix of sampled and greedy requests, any packing / submission
+    order / priority assignment: every request's tokens equal the solo
+    oracle with the same per-request seed.  ``spec_k > 0`` additionally
+    routes the whole workload through speculative rounds, which must be
+    output-invisible."""
+    cfg, params, prog = _model()
+    wl = _workload(seed, n_requests)
+    rng = np.random.default_rng(seed + 3)
+    order = list(rng.permutation(n_requests))
+    samplings = [
+        None if rng.integers(2) == 0 else SamplingParams(
+            temperature=float(rng.uniform(0.2, 1.5)),
+            top_k=int(rng.integers(0, 12)),
+            top_p=float(rng.uniform(0.4, 1.0)),
+            seed=int(rng.integers(0, 2**31 - 1)),
+        )
+        for _ in range(n_requests)
+    ]
+    prios = [
+        "interactive" if rng.integers(2) else "batch"
+        for _ in range(n_requests)
+    ]
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=FAST, slots=slots, max_len=MAX_LEN,
+            compute_dtype=jnp.float32, spec_k=spec_k,
+        ), programmed=prog,
+    )
+    reqs = [
+        Request(rid=i, tokens=wl[i][0], max_new_tokens=wl[i][1],
+                priority=prios[i], sampling=samplings[i])
+        for i in order
+    ]
+    for res in loop.run(reqs).results:
+        toks, max_new = wl[res.rid]
+        sp = samplings[res.rid]
+        key = (toks.tobytes(), max_new, sp)
+        if key not in _SOLO:
+            ref = greedy_generate(
+                params, cfg, jnp.asarray(toks)[None], max_new - 1,
+                policy=FAST, compute_dtype=jnp.float32, programmed=prog,
+                max_len=MAX_LEN, sampling=sp,
+            )
+            _SOLO[key] = list(np.asarray(ref[0]))
+        assert res.tokens == _SOLO[key], (
+            f"rid {res.rid} (sampling={sp}) diverged from solo"
+        )
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=8, deadline=None)
@@ -293,6 +350,16 @@ if HAVE_HYPOTHESIS:
             seed, n_requests, slots, max_skip
         )
 
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(1, 5),
+        st.integers(1, 3),
+        st.sampled_from([0, 2]),
+    )
+    def test_sampled_mix_equals_solo(seed, n_requests, slots, spec_k):
+        check_sampled_mix_equals_solo(seed, n_requests, slots, spec_k)
+
 else:
 
     @pytest.mark.parametrize(
@@ -332,3 +399,10 @@ else:
         check_scheduler_solo_tokens_and_aging_bound(
             seed, n_requests, slots, max_skip
         )
+
+    @pytest.mark.parametrize(
+        "seed,n_requests,slots,spec_k",
+        [(0, 4, 2, 0), (1, 5, 1, 0), (2, 3, 3, 2), (3, 5, 2, 2)],
+    )
+    def test_sampled_mix_equals_solo(seed, n_requests, slots, spec_k):
+        check_sampled_mix_equals_solo(seed, n_requests, slots, spec_k)

@@ -1,0 +1,441 @@
+"""Speculative decoding suite (serve/sampling.py, the verify step, and
+the accept/rollback machinery in serve/batching.py — DESIGN.md §7).
+
+Contract under test:
+
+* **Speculation is output-invisible.**  A draft token is accepted iff
+  it equals the token the TARGET itself emits at that position, so the
+  emitted stream is EXACTLY the non-speculative trajectory — tokens
+  equal and (fast path) per-token logits BITWISE equal, including after
+  rejected draft tails (the rollback-leak tests): a rewound frontier
+  must not leak one bit into any later logit row, in any slot.
+* **Greedy degeneracy.**  When draft and target share numerics and both
+  decode greedily, every draft matches and the measured acceptance rate
+  is EXACTLY 1.0 (the counters only consider drafts the accept rule
+  examined, so EOS/budget truncation cannot dilute it).
+* **Rollback survives the kernel and prefix-cache paths.**  The paged
+  verify writes land in already-allocated blocks and rejected tails are
+  dead under the length mask — with the Pallas kernels forced
+  (interpret) and with cross-request prefix sharing live, the same
+  bitwise equalities hold.
+* **Sampling.**  ``temperature=0`` sampling collapses to greedy
+  bitwise; a per-request seed yields identical tokens across packings;
+  and (slow, subprocess) meshed vs unmeshed serving draws identical
+  tokens for the same seed — the per-emission threefry keys are
+  sharding-invariant.
+* **Mode flips never reuse a stale trace** (the jit-cache-key fix):
+  back-to-back runs flipping greedy <-> sampled on one loop, and
+  speculative <-> plain across loops, each produce their own mode's
+  exact output.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import DPEConfig, spec
+from repro.core.layers import MemPolicy
+from repro.kernels import ops as kops
+from repro.models import init_params, program_params
+from repro.serve import (
+    Request,
+    SamplingParams,
+    ServeConfig,
+    ServeLoop,
+    greedy_generate,
+)
+
+INT8 = spec("int8")
+FAST = MemPolicy(
+    default=DPEConfig(input_spec=INT8, weight_spec=INT8, mode="fast")
+)
+DIGITAL = MemPolicy(default=None)
+MAX_LEN = 32
+SPEC_K = 3
+
+# lengths straddle pad buckets and force mid-stream refills at slots=2;
+# max_new large enough for several speculative rounds per request
+WORKLOAD = [(4, 8), (7, 6), (3, 7), (12, 5)]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prog_fast(model):
+    cfg, params = model
+    return program_params(params, cfg, FAST, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, workload=WORKLOAD, seed=0, preamble=0):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab, size=preamble).astype(np.int32)
+    return [
+        np.concatenate(
+            [pre, rng.integers(0, cfg.vocab, size=l).astype(np.int32)]
+        )
+        for l, _ in workload
+    ]
+
+
+def _serve(model, prog, *, policy=FAST, spec_k=0, draft_policy=None,
+           slots=2, workload=WORKLOAD, prompts=None, sampling=None,
+           **cfg_kw):
+    cfg, params = model
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=policy, slots=slots,
+            max_len=cfg_kw.pop("max_len", MAX_LEN),
+            compute_dtype=jnp.float32, collect_logits=True,
+            spec_k=spec_k, draft_policy=draft_policy, **cfg_kw,
+        ), programmed=prog,
+    )
+    if prompts is None:
+        prompts = _prompts(cfg, workload)
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=m,
+                sampling=sampling[i] if sampling else None)
+        for i, (p, (_, m)) in enumerate(zip(prompts, workload))
+    ]
+    return loop.run(reqs)
+
+
+def _assert_bitwise(rep_a, rep_b):
+    for a, b in zip(rep_a.results, rep_b.results):
+        assert a.tokens == b.tokens, f"rid {a.rid} tokens diverged"
+        assert len(a.logits) == len(b.logits)
+        for i, (x, y) in enumerate(zip(a.logits, b.logits)):
+            assert np.array_equal(x, y), (
+                f"rid {a.rid} logit row {i} not bitwise equal"
+            )
+
+
+# -- greedy degeneracy -------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["digital", "fast"])
+def test_greedy_draft_acceptance_exactly_one(model, prog_fast, mode):
+    """Draft numerics == target numerics, both greedy: every examined
+    draft matches the target's own token, so acceptance is EXACTLY 1.0
+    and the tokens are bitwise the non-speculative stream — while the
+    target runs strictly fewer (multi-token) forwards."""
+    policy = DIGITAL if mode == "digital" else FAST
+    draft = None if mode == "digital" else FAST
+    prog = None if mode == "digital" else prog_fast
+    plain = _serve(model, prog, policy=policy)
+    rep = _serve(model, prog, policy=policy, spec_k=SPEC_K,
+                 draft_policy=draft)
+    _assert_bitwise(plain, rep)
+    assert rep.tokens_drafted > 0
+    assert rep.tokens_accepted == rep.tokens_drafted
+    assert rep.acceptance_rate == 1.0
+    for res in rep.results:
+        assert res.acceptance == 1.0
+    assert rep.decode_steps < plain.decode_steps, (
+        "speculation accepted everything but saved no target rounds"
+    )
+
+
+# -- rollback leaves no trace ------------------------------------------------
+
+
+def _rejection_run(model, prog_fast, **cfg_kw):
+    """mem_fast target with a DIGITAL draft: proposals come from
+    different numerics, so rejections genuinely occur (asserted) and
+    every rejected tail exercises the pos rewind."""
+    plain = _serve(model, prog_fast, **cfg_kw)
+    rep = _serve(model, prog_fast, spec_k=SPEC_K, draft_policy=None,
+                 **cfg_kw)
+    assert rep.tokens_drafted > rep.tokens_accepted > 0, (
+        "workload produced no rejections (or no acceptances): "
+        f"{rep.tokens_accepted}/{rep.tokens_drafted} — the rollback "
+        "path was not exercised"
+    )
+    return plain, rep
+
+
+def test_rollback_leaves_no_trace(model, prog_fast):
+    """After a rejected draft tail, every subsequent logit row is
+    BITWISE the never-speculated run's: the rewound frontier's dead KV
+    is invisible under the length mask."""
+    plain, rep = _rejection_run(model, prog_fast)
+    _assert_bitwise(plain, rep)
+
+
+def test_rollback_neighbor_slot_isolation(model, prog_fast):
+    """A speculative round (with rejections) on one slot must not
+    perturb any neighbour by a bit: the speculative slots=2 run equals
+    the non-speculative slots=1 run — packing AND speculation are
+    jointly invisible."""
+    plain_solo = _serve(model, prog_fast, slots=1)
+    _, rep = _rejection_run(model, prog_fast, slots=2)
+    _assert_bitwise(plain_solo, rep)
+
+
+def test_rollback_kernels_forced(model, prog_fast):
+    """The same rollback bitwise equality with the Pallas serving
+    kernels forced (interpret mode runs on CPU): the decode/prefill
+    kernels and the XLA-gather verify step agree on the arena bytes."""
+    prev = kops.set_interpret(True)
+    try:
+        plain, rep = _rejection_run(model, prog_fast)
+        _assert_bitwise(plain, rep)
+    finally:
+        kops.set_interpret(prev)
+
+
+def test_rollback_with_prefix_cache(model, prog_fast):
+    """Rollback + cross-request prefix sharing: speculative writes land
+    only in the request's own decode-region blocks (never registered in
+    the prefix hash registry), so shared prompt prefixes stay clean."""
+    cfg, _ = model
+    prompts = _prompts(cfg, seed=5, preamble=16)
+    plain = _serve(model, prog_fast, prompts=prompts, block_size=8,
+                   max_len=48)
+    rep = _serve(model, prog_fast, prompts=prompts, block_size=8,
+                 max_len=48, spec_k=SPEC_K, draft_policy=None)
+    assert rep.prefix_cache_hits > 0, "preamble never hit the cache"
+    assert rep.tokens_drafted > rep.tokens_accepted > 0
+    _assert_bitwise(plain, rep)
+
+
+# -- sampling ----------------------------------------------------------------
+
+
+def test_temperature_zero_is_greedy_bitwise(model, prog_fast):
+    """``SamplingParams(temperature=0)`` routes through the sampled
+    step functions yet emits bitwise the greedy stream — argmax is
+    selected inside ``sample_row``, not approximated by a cold draw."""
+    greedy = _serve(model, prog_fast)
+    sampled = _serve(
+        model, prog_fast,
+        sampling=[SamplingParams(temperature=0.0, seed=i)
+                  for i in range(len(WORKLOAD))],
+    )
+    _assert_bitwise(greedy, sampled)
+    # and the solo oracle agrees with itself across the same flip
+    cfg, params = model
+    p = _prompts(cfg)[0]
+    a = greedy_generate(
+        params, cfg, jnp.asarray(p)[None], 6, policy=FAST,
+        compute_dtype=jnp.float32, programmed=prog_fast, max_len=MAX_LEN,
+    )
+    b = greedy_generate(
+        params, cfg, jnp.asarray(p)[None], 6, policy=FAST,
+        compute_dtype=jnp.float32, programmed=prog_fast, max_len=MAX_LEN,
+        sampling=SamplingParams(temperature=0.0, seed=3),
+    )
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_same_seed_same_tokens_across_packings(model, prog_fast):
+    """A sampled request's tokens depend on (seed, emission index)
+    only: slots=1 vs slots=3, plain vs speculative, all identical."""
+    sampling = [
+        SamplingParams(temperature=0.9, top_k=10, top_p=0.9, seed=100 + i)
+        for i in range(len(WORKLOAD))
+    ]
+    base = _serve(model, prog_fast, slots=1, sampling=sampling)
+    packed = _serve(model, prog_fast, slots=3, sampling=sampling)
+    spec = _serve(model, prog_fast, slots=2, sampling=sampling,
+                  spec_k=SPEC_K, draft_policy=None)
+    _assert_bitwise(base, packed)
+    _assert_bitwise(base, spec)
+
+
+# -- jit-cache mode keying (the regression fix) ------------------------------
+
+
+def test_mode_flip_reuses_no_stale_trace(model, prog_fast):
+    """Back-to-back runs on ONE loop flipping greedy -> sampled ->
+    greedy: each run's outputs are its own mode's exactly (the greedy
+    and sampled step functions are distinct cache entries keyed by the
+    mode, like the kernel-state key from the kernels PR)."""
+    cfg, params = model
+    loop = ServeLoop(
+        params, cfg, ServeConfig(
+            policy=FAST, slots=2, max_len=MAX_LEN,
+            compute_dtype=jnp.float32, collect_logits=True,
+        ), programmed=prog_fast,
+    )
+    prompts = _prompts(cfg)
+    sampling = [
+        SamplingParams(temperature=1.1, top_k=8, seed=7 + i)
+        for i in range(len(WORKLOAD))
+    ]
+
+    def reqs(with_sampling):
+        return [
+            Request(rid=i, tokens=p, max_new_tokens=m,
+                    sampling=sampling[i] if with_sampling else None)
+            for i, (p, (_, m)) in enumerate(zip(prompts, WORKLOAD))
+        ]
+
+    greedy_1 = loop.run(reqs(False))
+    sampled = loop.run(reqs(True))
+    greedy_2 = loop.run(reqs(False))
+    _assert_bitwise(greedy_1, greedy_2)
+    # the sampled leg really sampled (differs from greedy somewhere)
+    assert any(
+        a.tokens != b.tokens
+        for a, b in zip(greedy_1.results, sampled.results)
+    )
+    # and matches the solo oracle per request (mode flip leaked nothing)
+    for res, p, (_, m), sp in zip(
+        sampled.results, prompts, WORKLOAD, sampling
+    ):
+        ref = greedy_generate(
+            params, cfg, jnp.asarray(p)[None], m - 1, policy=FAST,
+            compute_dtype=jnp.float32, programmed=prog_fast,
+            max_len=MAX_LEN, sampling=sp,
+        )
+        assert res.tokens == list(np.asarray(ref[0]))
+
+
+def test_spec_flip_across_loops(model, prog_fast):
+    """Interleaved runs of a speculative and a plain loop (shared
+    process-level jit caches): neither mode's trace contaminates the
+    other's output."""
+    plain = _serve(model, prog_fast)
+    spec1 = _serve(model, prog_fast, spec_k=2, draft_policy=None)
+    plain2 = _serve(model, prog_fast)
+    spec2 = _serve(model, prog_fast, spec_k=SPEC_K, draft_policy=None)
+    _assert_bitwise(plain, plain2)
+    _assert_bitwise(plain, spec1)
+    _assert_bitwise(plain, spec2)
+
+
+# -- meshed vs unmeshed sampling (slow, subprocess) --------------------------
+
+
+_MESH_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.configs import get_smoke
+    from repro.core import DPEConfig, spec
+    from repro.core.layers import MemPolicy
+    from repro.serve import Request, SamplingParams, ServeConfig, ServeLoop
+
+    cfg = get_smoke("qwen2-0.5b").replace(vocab=64)
+    params = init = None
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    workload = [(4, 6), (7, 4), (3, 5)]
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l, _ in workload]
+    samplings = [SamplingParams(temperature=0.8, top_k=12, top_p=0.9,
+                                seed=40 + i) for i in range(len(workload))]
+    mk = lambda: [Request(rid=i, tokens=prompts[i], max_new_tokens=m,
+                          sampling=samplings[i])
+                  for i, (_, m) in enumerate(workload)]
+
+    out = {}
+    # digital policy: no programmed state to re-partition, so meshed and
+    # unmeshed runs share one compilation story and the per-emission
+    # threefry keys (jax_threefry_partitionable) must yield identical
+    # draws — tokens bitwise equal across the mesh flip AND spec_k
+    for label, kw in (
+        ("plain", {}),
+        ("spec", {"spec_k": 2}),
+    ):
+        unmeshed = ServeLoop(params, cfg, ServeConfig(
+            policy=None, slots=2, max_len=32,
+            compute_dtype=jnp.float32, **kw))
+        meshed = ServeLoop(params, cfg, ServeConfig(
+            policy=None, slots=2, max_len=32,
+            compute_dtype=jnp.float32, mesh=mesh, **kw))
+        out["digital_" + label] = {
+            "unmeshed": [r.tokens for r in unmeshed.run(mk()).results],
+            "meshed": [r.tokens for r in meshed.run(mk()).results],
+        }
+    # fast policy: programmed state materialises SHARDED.  The loop and
+    # the solo oracle are DIFFERENT XLA programs, and under GSPMD the §6
+    # rounding caveat bites: a fast-path quantiser round() near-tie may
+    # resolve differently across compilations — greedy argmax shrugs
+    # that off, but a sampled draw amplifies a 1-ulp logit flip into a
+    # different token.  So the honest sampled contract here is
+    # packing/admission-order invariance WITHIN one compiled loop: same
+    # mesh, same slots, requests submitted in reverse order (different
+    # slot assignment + batch interleave) must emit identical tokens
+    # per request.
+    INT8 = spec("int8")
+    pol = MemPolicy(default=DPEConfig(input_spec=INT8, weight_spec=INT8,
+                                      array_size=(32, 32), mode="fast",
+                                      store_dtype="bf16"))
+    loop = ServeLoop(params, cfg, ServeConfig(
+        policy=pol, slots=2, max_len=32, compute_dtype=jnp.float32,
+        mesh=mesh))
+    by_rid = lambda rep: {str(r.rid): r.tokens for r in rep.results}
+    out["fast_same_mesh"] = {
+        "forward": by_rid(loop.run(mk())),
+        "reversed": by_rid(loop.run(list(reversed(mk())))),
+    }
+    print("RESULT " + json.dumps(out))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def meshed_sampling_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[-1][len("RESULT "):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("leg", ["digital_plain", "digital_spec"])
+def test_sampled_tokens_meshed_equals_unmeshed(meshed_sampling_results, leg):
+    """Same seed, same request → identical sampled tokens with and
+    without a 2x4 device mesh (digital policy: one compilation story;
+    the threefry keys are sharding-invariant by construction)."""
+    res = meshed_sampling_results[leg]
+    assert res["meshed"] == res["unmeshed"]
+
+
+@pytest.mark.slow
+def test_sampled_tokens_sharded_packing_invariant(meshed_sampling_results):
+    """Sampled serving against mesh-SHARDED fast programmed state is
+    admission-order/packing invariant: reversing submission order
+    (different slot assignment + batch interleave, same compiled loop)
+    emits identical tokens per request.  The solo-oracle comparison is
+    deliberately NOT asserted on the fast path under a mesh — loop and
+    oracle are different XLA programs, and the §6 rounding caveat means
+    a quantiser near-tie may flip across compilations; sampled draws
+    amplify that 1-ulp flip into a different token (greedy argmax does
+    not — see test_batching's sharded legs).  The digital legs above
+    pin the cross-program meshed==unmeshed sampled equality."""
+    res = meshed_sampling_results["fast_same_mesh"]
+    assert res["forward"] == res["reversed"]
+    assert len(res["forward"]) == 3
+    assert all(res["forward"].values())
